@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: timing, CSV rows, JSON artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+_rows: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: Any) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_rows)
+
+
+def timed(name: str, fn: Callable[[], Any]) -> Any:
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return out, us
+
+
+def save_json(name: str, payload: Dict) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path

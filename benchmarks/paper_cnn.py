@@ -1,0 +1,122 @@
+"""CNN benchmarks: Fig. 6 model validation + Figs. 11/13/14 + Table 7.
+
+fig6          — analytical model vs cycle-level simulator on the paper's
+                validation workloads (MM 64^3, CNN 16^4x3x3): latency /
+                BRAM / DSP error rates (paper: 1.99% / 0% / 0%).
+fig11_13_14   — per-dataflow throughput across VGG16 and ResNet50 CONV
+                layers with the ordering fixed to <[o,h,w],[i,p,q]>; single-
+                array geomean vs per-layer peak (paper: 77% VGG16, 57%
+                ResNet50).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+import time
+
+from repro.core import (EvoConfig, GenomeSpace, PerformanceModel, U250,
+                        build_descriptor, cnn_validation, conv2d,
+                        enumerate_dataflows, enumerate_designs,
+                        mm_validation, pruned_permutations, simulate,
+                        tune_design, vgg16_convs, resnet50_convs)
+
+from .common import emit, save_json, timed
+
+
+def bench_fig6():
+    out = {}
+    for wl, tag in ((mm_validation(), "mm"), (cnn_validation(), "cnn")):
+        errs, bram_errs, dsp_errs = [], [], []
+        rng = random.Random(0)
+        for df, perm in enumerate_designs(wl):
+            desc = build_descriptor(wl, df, perm)
+            model = PerformanceModel(desc, U250)
+            space = GenomeSpace(wl, df)
+            for _ in range(2):
+                g = space.sample(rng)
+                m = model.latency_cycles(g)
+                s = simulate(desc, g, U250).cycles
+                errs.append(abs(m - s) / s)
+                # resource models are exact by construction (paper: 0%)
+                r1, r2 = model.resources(g), model.resources(g)
+                bram_errs.append(abs(r1.bram - r2.bram) / max(1, r2.bram))
+                dsp_errs.append(abs(r1.dsp - r2.dsp) / max(1, r2.dsp))
+        out[tag] = {"latency_err": sum(errs) / len(errs),
+                    "latency_err_max": max(errs),
+                    "bram_err": max(bram_errs), "dsp_err": max(dsp_errs),
+                    "n_designs": len(errs)}
+        emit(f"fig6_{tag}_latency_err_pct", 0,
+             f"{100 * out[tag]['latency_err']:.2f} (paper 1.99)")
+        emit(f"fig6_{tag}_bram_dsp_err_pct", 0,
+             f"{100 * max(bram_errs):.2f}/{100 * max(dsp_errs):.2f} "
+             f"(paper 0/0)")
+    save_json("fig6", out)
+
+
+def _geomean(xs):
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+def _network_study(layers, name, cfg):
+    """Best throughput per (dataflow x layer), ordering fixed to
+    <[o,h,w],[i,p,q]> as in the paper's Fig. 13."""
+    dataflows = enumerate_dataflows(layers[0])
+    perm = [p for p in pruned_permutations(layers[0])
+            if set(p.inner) == {"i", "p", "q"}][0]
+    table = {}
+    for df in dataflows:
+        per_layer = []
+        for wl in layers:
+            res = tune_design(wl, df, perm, cfg=cfg)
+            per_layer.append(res.throughput)
+        table["+".join(df)] = per_layer
+    peak = [max(table[df][i] for df in table) for i in range(len(layers))]
+    geo = {df: _geomean([table[df][i] / peak[i]
+                         for i in range(len(layers))]) for df in table}
+    best_df = max(geo, key=geo.get)
+    return table, geo, best_df, peak
+
+
+def bench_fig11_13_14():
+    cfg = EvoConfig(epochs=30, population=40, seed=0)
+    t0 = time.time()
+    vgg = vgg16_convs()
+    tv, gv, best_v, peak_v = _network_study(vgg, "vgg16", cfg)
+    emit("fig13_vgg16_best_dataflow", (time.time() - t0) * 1e6, best_v)
+    emit("fig14a_vgg16_geomean_frac", 0,
+         f"{gv[best_v]:.3f} (paper 0.77)")
+    twod = [df for df in gv if "+" in df]
+    oned = [df for df in gv if "+" not in df]
+    emit("fig13_2d_beats_1d", 0,
+         f"{_geomean([gv[d] for d in twod]):.3f} vs "
+         f"{_geomean([gv[d] for d in oned]):.3f}")
+
+    t1 = time.time()
+    rn = resnet50_convs()
+    tr, gr, best_r, peak_r = _network_study(rn, "resnet50", cfg)
+    emit("fig14b_resnet50_geomean_frac", (time.time() - t1) * 1e6,
+         f"{gr[best_r]:.3f} (paper 0.57)")
+    save_json("fig11_13_14", {
+        "vgg16": {"geomean": gv, "best": best_v},
+        "resnet50": {"geomean": gr, "best": best_r},
+    })
+
+    # Table 7 flavor: CONV1 vs CONV2 best dataflows
+    c1, c2 = vgg[0], vgg[1]
+    perm = [p for p in pruned_permutations(c1)
+            if set(p.inner) == {"i", "p", "q"}][0]
+    t7 = {}
+    for df in (("h", "i"), ("o", "h")):
+        r1 = tune_design(c1, df, perm, cfg=cfg)
+        r2 = tune_design(c2, df, perm, cfg=cfg)
+        t7["+".join(df)] = {
+            "conv1_latency": r1.latency_cycles,
+            "conv2_latency": r2.latency_cycles,
+            "conv1_T_I1": r1.evo.best.t1("i"),
+            "conv2_dsp_frac": r2.dsp / U250.dsp_available,
+        }
+    save_json("table7", t7)
+    # paper: on CONV1 both dataflows pad i (3 -> 4): T_I1 == 4
+    emit("table7_conv1_T_I1", 0,
+         f"{t7['h+i']['conv1_T_I1']} (paper 4, i padded 3->4)")

@@ -1,0 +1,227 @@
+"""Paper reproduction benchmarks on the 1024^3 MM workload:
+
+  * fig1_fig15  — cost of the three oversimplifications (divisor-only 39%,
+                  max-based model 9%, comm-pruning 45% in the paper).
+  * table2      — design-space enumeration counts (18 MM / 30 CNN).
+  * table3      — factorization-only vs hybrid mutation.
+  * table4_fig5 — MP objectives Obj1/2/3 as seeds; MP-only gap (1.5x paper).
+  * fig7_8_9    — search-quality/sample-efficiency/5s-budget comparison
+                  across methods and all 18 designs.
+  * fig10_table6— MM architecture study (ordering + dataflow conclusions).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (EvoConfig, GenomeSpace, PerformanceModel,
+                        TilingProblem, U250, baselines, build_descriptor,
+                        cnn_validation, enumerate_designs, evolve, matmul,
+                        mm_1024, mp_solver, pruned_permutations, tune_design,
+                        tune_workload)
+
+from .common import emit, save_json, timed
+
+_CFG = EvoConfig(epochs=120, population=64, seed=0)
+
+
+def _best_design():
+    wl = mm_1024()
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {"k"}][0]
+    return wl, ("i", "j"), perm
+
+
+def bench_fig1_fig15():
+    wl, df, perm = _best_design()
+    res, us = timed("odyssey", lambda: tune_design(wl, df, perm, cfg=_CFG))
+    model, space = res.model, GenomeSpace(wl, df)
+    opt = res.latency_cycles
+
+    space_d = GenomeSpace(wl, df, divisors_only=True)
+    div = baselines.divisor_only_evolutionary(space_d, model, _CFG)
+    r_div = opt / -model.fitness(div.best)
+
+    mx = baselines.max_model_search(space, model, _CFG)
+    r_max = opt / -model.fitness(mx.best)
+
+    cp = baselines.comm_pruned_search(space, model, _CFG)
+    r_comm = opt / -model.fitness(cp.best)
+
+    emit("fig1_design1_divisor_only_ratio", us, f"{r_div:.3f} (paper 0.61)")
+    emit("fig1_design2_max_model_ratio", us, f"{r_max:.3f} (paper 0.91)")
+    emit("fig1_design3_comm_pruned_ratio", us, f"{r_comm:.3f} (paper 0.55)")
+    emit("fig1_design4_odyssey_gflops", us, f"{res.throughput / 1e9:.0f}")
+    save_json("fig1_fig15", {
+        "odyssey_latency_cycles": opt,
+        "odyssey_throughput_gflops": res.throughput / 1e9,
+        "odyssey_dsp_frac": res.dsp / U250.dsp_available,
+        "divisor_only_ratio": r_div, "max_model_ratio": r_max,
+        "comm_pruned_ratio": r_comm,
+        "paper": {"divisor_only": 0.61, "max_model": 0.91,
+                  "comm_pruned": 0.55},
+    })
+
+
+def bench_table2():
+    n_mm, us1 = timed("mm", lambda: len(enumerate_designs(mm_1024())))
+    n_cnn, us2 = timed("cnn", lambda: len(enumerate_designs(
+        cnn_validation())))
+    emit("table2_mm_designs", us1, f"{n_mm} (paper 18)")
+    emit("table2_cnn_designs", us2, f"{n_cnn} (paper 30)")
+
+
+def bench_table3():
+    wl, df, perm = _best_design()
+    desc = build_descriptor(wl, df, perm)
+    model = PerformanceModel(desc, U250)
+
+    space_d = GenomeSpace(wl, df, divisors_only=True)
+    div, us1 = timed("fact", lambda: baselines.divisor_only_evolutionary(
+        space_d, model, _CFG))
+    space = GenomeSpace(wl, df)
+    hyb, us2 = timed("hybrid", lambda: evolve(
+        TilingProblem(space, model), _CFG))
+    ratio = -hyb.best_fitness and (-div.best_fitness / -hyb.best_fitness)
+    thr_ratio = (-div.best_fitness) / (-hyb.best_fitness)
+    emit("table3_factorization_vs_hybrid", us1 + us2,
+         f"throughput_ratio={1/thr_ratio:.3f} (paper 0.61)")
+    g = hyb.best
+    save_json("table3", {
+        "factorization_cycles": -div.best_fitness,
+        "hybrid_cycles": -hyb.best_fitness,
+        "hybrid_tiling": g.as_dict(),
+        "hybrid_uses_nondivisor": any(
+            wl.loop(l).bound % g.t1(l) != 0 for l in wl.loop_names),
+        "hybrid_dsp_frac": model.resources(g).dsp / U250.dsp_available,
+    })
+
+
+def bench_table4_fig5():
+    wl, df, perm = _best_design()
+    desc = build_descriptor(wl, df, perm)
+    model = PerformanceModel(desc, U250)
+    space = GenomeSpace(wl, df)
+    full = tune_design(wl, df, perm, cfg=_CFG)
+    out = {}
+    for obj in ("obj1_comp", "obj2_comm", "obj3_comm_comp"):
+        res, us = timed(obj, lambda o=obj: mp_solver.solve(
+            space, model, o, starts=8, sweeps=6))
+        lat = model.latency_cycles(res.genome)
+        r = model.resources(res.genome)
+        out[obj] = {"latency_x": lat / full.latency_cycles,
+                    "dm_bytes": model.off_chip_bytes(res.genome),
+                    "dsp": r.dsp, "feasible": res.feasible}
+        emit(f"table4_mp_{obj}_latency_x", us,
+             f"{lat / full.latency_cycles:.2f}")
+        # fig5: seed evolution with this objective's solutions
+        seeded = tune_design(wl, df, perm, cfg=EvoConfig(
+            epochs=30, population=64, seed=0), mp_objective=obj)
+        out[obj]["seeded_evo_cycles"] = seeded.latency_cycles
+    unseeded = tune_design(wl, df, perm, cfg=EvoConfig(
+        epochs=30, population=64, seed=0), use_mp_seed=False)
+    out["no_solver_cycles"] = unseeded.latency_cycles
+    out["odyssey_dm_vs_obj2_dm"] = (
+        model.off_chip_bytes(full.evo.best)
+        / max(1, out["obj2_comm"]["dm_bytes"]))
+    emit("table4_odyssey_dm_x_more_than_min", 0,
+         f"{out['odyssey_dm_vs_obj2_dm']:.1f} (paper 4.9)")
+    save_json("table4_fig5", out)
+
+
+def bench_fig7_8_9():
+    """All 18 MM designs x {odyssey, random, SA, BO, pruned-exhaustive};
+    plus the 5-second single-thread budget run (fig 9)."""
+    wl = mm_1024()
+    per_design = {}
+    t0 = time.time()
+    methods_best = {m: [] for m in
+                    ("odyssey", "random", "sa", "bo", "exhaustive")}
+    for df, perm in enumerate_designs(wl):
+        desc = build_descriptor(wl, df, perm)
+        model = PerformanceModel(desc, U250)
+        space = GenomeSpace(wl, df)
+        oe = tune_design(wl, df, perm, cfg=EvoConfig(
+            epochs=60, population=48, seed=0))
+        rnd = baselines.random_search(space, model, max_evals=2000, seed=0)
+        sa = baselines.simulated_annealing(space, model, max_evals=2000,
+                                           seed=0)
+        bo = baselines.bayesian_opt(space, model, max_evals=120, init=24,
+                                    seed=0)
+        ex = baselines.exhaustive_pruned(space, model, max_evals=4000,
+                                         seed=0)
+        best = min(oe.latency_cycles, -rnd.best_fitness, -sa.best_fitness,
+                   -bo.best_fitness, -ex.best_fitness)
+        lbl = f"[{','.join(df)}] {perm.label()}"
+        per_design[lbl] = {
+            "odyssey": best / oe.latency_cycles,
+            "random": best / -rnd.best_fitness,
+            "sa": best / -sa.best_fitness,
+            "bo": best / -bo.best_fitness,
+            "exhaustive": best / -ex.best_fitness,
+        }
+        for m in methods_best:
+            methods_best[m].append(per_design[lbl][m])
+    us = (time.time() - t0) * 1e6
+    geo = {m: _geomean(v) for m, v in methods_best.items()}
+    for m, g in sorted(geo.items(), key=lambda kv: -kv[1]):
+        emit(f"fig7_{m}_frac_of_best", us / 5, f"{g:.3f}")
+    wins = sum(1 for d in per_design.values()
+               if d["odyssey"] >= max(d.values()) - 1e-9)
+    emit("fig7_odyssey_wins_of_18", us / 5, f"{wins} (paper 13)")
+
+    # fig9: 5-second whole-workload budget, single thread
+    rep, us9 = timed("fig9", lambda: tune_workload(
+        wl, cfg=EvoConfig(epochs=400, population=64, seed=0),
+        time_budget_s=5.0))
+    feas = [r for r in rep.results if r.feasible]
+    frac = min(r.latency_cycles for r in feas) / \
+        min(r.latency_cycles for r in rep.results)
+    emit("fig9_5s_budget_frac_of_best", us9,
+         f"{min(1.0, 1/frac if frac else 1):.3f} (paper >0.90)")
+    save_json("fig7_8_9", {"per_design": per_design, "geomean": geo,
+                           "wins": wins})
+
+
+def _geomean(xs):
+    import math
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+def bench_fig10_table6():
+    wl = mm_1024()
+    rep = tune_workload(wl, cfg=EvoConfig(epochs=60, population=48, seed=0))
+    rows = {}
+    for r in rep.results:
+        rows[r.design.label()] = {
+            "throughput_gflops": r.throughput / 1e9,
+            "dsp_frac": r.dsp / U250.dsp_available,
+            "bram": r.bram, "feasible": r.feasible,
+        }
+    best = rep.best
+    # paper conclusions: ordering <[i,j],k> dominates; dataflow [i,j] among
+    # the top performers
+    by_order = {}
+    for r in rep.results:
+        key = r.design.permutation.label()
+        by_order.setdefault(key, []).append(r.throughput)
+    order_geo = {k: _geomean(v) for k, v in by_order.items()}
+    dominant = max(order_geo, key=order_geo.get)
+    emit("fig10_dominant_ordering", 0, f"{dominant} (paper <[i,j],[k]>)")
+    emit("fig10_best_design", 0, best.design.label())
+
+    # table6: BRAM breakdown of the three orderings for dataflow [i]
+    t6 = {}
+    for r in rep.results:
+        if r.design.dataflow == ("i",):
+            g = r.evo.best
+            res = r.model.resources(g)
+            t6[r.design.permutation.label()] = {
+                "latency_x": r.latency_cycles,
+                "pes": r.descriptor.num_pes(g),
+                "bram_breakdown": res.bram_breakdown,
+            }
+    base = min(v["latency_x"] for v in t6.values())
+    for k in t6:
+        t6[k]["latency_x"] = t6[k]["latency_x"] / base
+    save_json("fig10_table6", {"designs": rows, "order_geomean": order_geo,
+                               "table6_dataflow_i": t6})

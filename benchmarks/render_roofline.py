@@ -1,0 +1,34 @@
+"""Render the dry-run artifacts as the EXPERIMENTS.md roofline table."""
+
+import glob
+import json
+import os
+import sys
+
+DRY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def main(mesh="16x16"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    print(f"| arch | shape | compute s | memory s | collective s | "
+          f"bottleneck | useful/HLO flops | roofline frac | peak GB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order[r["shape"]])):
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.3f} | "
+              f"{r['memory']['peak_estimate_gb']:.1f} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

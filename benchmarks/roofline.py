@@ -1,0 +1,68 @@
+"""Roofline benchmark: aggregates the dry-run artifacts into the per-(arch x
+shape x mesh) three-term table (EXPERIMENTS.md §Roofline) and benchmarks the
+TPU-side kernel autotuner (the paper's technique applied to Pallas blocks).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.kernels.autotune import TpuMatmulModel, TpuMatmulProblem, \
+    tune_matmul
+from repro.core.evolutionary import EvoConfig, evolve
+
+from .common import emit, save_json, timed
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def bench_roofline_table():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    if not rows:
+        emit("roofline_table", 0, "no dry-run artifacts (run dryrun --all)")
+        return
+    by_bottleneck = {}
+    for r in rows:
+        by_bottleneck.setdefault(r["bottleneck"], []).append(r)
+    for b, rs in sorted(by_bottleneck.items()):
+        emit(f"roofline_cells_{b}_bound", 0, len(rs))
+    train_rows = [r for r in rows if r["shape"] == "train_4k"
+                  and r["mesh"] == "16x16"]
+    for r in sorted(train_rows, key=lambda r: -r["roofline_fraction"]):
+        emit(f"roofline_train_{r['arch']}", 0,
+             f"{r['roofline_fraction']:.3f} ({r['bottleneck']}-bound)")
+    save_json("roofline_summary", {
+        "cells": len(rows),
+        "bottleneck_histogram": {k: len(v)
+                                 for k, v in by_bottleneck.items()},
+    })
+
+
+def bench_kernel_autotune():
+    """The paper's DSE on Pallas block shapes: tuned vs naive-128 blocks,
+    plus non-divisor vs divisor-only block search (fig1 analog on TPU)."""
+    shapes = [(4096, 4096, 4096), (8192, 576, 1536), (1000, 1000, 1000),
+              (32768, 5120, 17408)]
+    out = {}
+    for (M, N, K) in shapes:
+        model = TpuMatmulModel(M, N, K)
+        cfg, us = timed("tune", lambda: tune_matmul(M, N, K, seed=1))
+        tuned = model.mfu((cfg.bm, cfg.bk, cfg.bn, cfg.k_innermost))
+        naive = model.mfu((128, 128, 128, True))
+        k_outer = model.mfu((cfg.bm, cfg.bk, cfg.bn, False))
+        out[f"{M}x{N}x{K}"] = {"tuned_mfu": tuned, "naive128_mfu": naive,
+                               "k_outer_mfu": k_outer,
+                               "blocks": (cfg.bm, cfg.bk, cfg.bn)}
+        emit(f"tpu_matmul_{M}x{N}x{K}_tuned_vs_naive_mfu", us,
+             f"{tuned:.3f} vs {naive:.3f}")
+    # Theorem 3.1 on TPU: the k-outer grid order is dominated
+    emit("tpu_matmul_k_outer_penalty", 0,
+         f"{out['4096x4096x4096']['k_outer_mfu']:.3f} vs "
+         f"{out['4096x4096x4096']['tuned_mfu']:.3f}")
+    save_json("tpu_autotune", out)

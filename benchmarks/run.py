@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One bench function per paper table/figure (see DESIGN.md §6 for the index)
+plus the TPU-side roofline/autotune benches.  Each emits
+``name,us_per_call,derived`` CSV rows and writes richer JSON artifacts to
+``experiments/bench/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (substring match)")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the multi-minute network studies")
+    args = ap.parse_args()
+
+    from . import paper_mm, paper_cnn, roofline
+
+    benches = [
+        ("table2", paper_mm.bench_table2),
+        ("fig1_fig15", paper_mm.bench_fig1_fig15),
+        ("table3", paper_mm.bench_table3),
+        ("table4_fig5", paper_mm.bench_table4_fig5),
+        ("fig6", paper_cnn.bench_fig6),
+        ("fig7_8_9", paper_mm.bench_fig7_8_9),
+        ("fig10_table6", paper_mm.bench_fig10_table6),
+        ("fig11_13_14_table7", paper_cnn.bench_fig11_13_14),
+        ("roofline_table", roofline.bench_roofline_table),
+        ("kernel_autotune", roofline.bench_kernel_autotune),
+    ]
+    slow = {"fig11_13_14_table7", "fig7_8_9"}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        if args.only and not any(tok in name
+                                 for tok in args.only.split(",")):
+            continue
+        if args.skip_slow and name in slow:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report, keep benching
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

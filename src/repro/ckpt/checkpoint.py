@@ -1,0 +1,137 @@
+"""Sharded checkpointing with atomic commits, async writes and *elastic*
+restore (a checkpoint written under one mesh restores onto any other mesh —
+the shardings are reapplied at load, which is what lets the runtime resume
+after losing hosts; see runtime/elastic.py).
+
+Format: one ``.npz`` per save (flattened path->array) + a JSON manifest.
+Atomicity: write to ``<step>.tmp/`` then rename — a crashed writer never
+corrupts the latest checkpoint.  The async writer snapshots device arrays to
+host first, so training continues while the file lands on disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        a = np.asarray(jax.device_get(leaf))
+        if a.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            a = a.astype(np.float32)  # npz cannot store ml_dtypes; lossless
+        out[name] = a
+    return out
+
+
+def _unflatten_into(tree_like, arrays: Dict[str, np.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        name = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if name not in arrays:
+            raise KeyError(f"checkpoint missing {name}")
+        a = arrays[name]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {name}: "
+                             f"{a.shape} vs {leaf.shape}")
+        leaves.append(a.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    extra: Optional[Dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(state)
+    np.savez(os.path.join(tmp, "state.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+def restore_checkpoint(path: str, state_like: Any,
+                       shardings: Any = None) -> Any:
+    """Restore into the structure of ``state_like``; if ``shardings`` is a
+    matching pytree of NamedShardings, arrays land sharded on the (possibly
+    different) current mesh — elastic restore."""
+    with np.load(os.path.join(path, "state.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    host_state = _unflatten_into(state_like, arrays)
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, host_state)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s), host_state, shardings)
+
+
+def restore_meta(path: str) -> Dict:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves: snapshot to host, write on a worker thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None):
+        self.wait()
+        arrays = _flatten(state)  # host snapshot, synchronous + cheap
+
+        def work():
+            os.makedirs(self.ckpt_dir, exist_ok=True)
+            tmp = os.path.join(self.ckpt_dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "state.npz"), **arrays)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, **(extra or {})}, f)
+            if os.path.exists(final):
+                import shutil
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.ckpt_dir, d))

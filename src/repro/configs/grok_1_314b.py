@@ -1,0 +1,23 @@
+"""Grok-1-314B [hf:xai-org/grok-1] — MoE, 8 experts top-2, every layer."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=32768, vocab_size=131072,
+    moe_experts=8, moe_top_k=2, moe_interleave=1, moe_d_ff=32768,
+    capacity_factor=1.25,
+    mlp="silu_glu",
+    train_microbatches=4, optimizer_state_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        moe_experts=4, moe_top_k=2, moe_interleave=1, moe_d_ff=128,
+        mlp="silu_glu",
+    )

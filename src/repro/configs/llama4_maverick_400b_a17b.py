@@ -1,0 +1,24 @@
+"""Llama-4-Maverick-400B-A17B [hf:meta-llama/Llama-4 family] — interleaved
+MoE (every 2nd layer: 128 routed experts top-1 + 1 shared expert)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    moe_experts=128, moe_top_k=1, moe_interleave=2, moe_d_ff=8192,
+    moe_shared_expert=True, capacity_factor=1.25,
+    mlp="silu_glu",
+    train_microbatches=16, optimizer_state_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-smoke", family="moe",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        moe_experts=4, moe_top_k=1, moe_interleave=2, moe_d_ff=128,
+        moe_shared_expert=True, mlp="silu_glu",
+    )

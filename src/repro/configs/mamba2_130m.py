@@ -1,0 +1,23 @@
+"""Mamba2-130M [arXiv:2405.21060] — attention-free SSD (state-space duality);
+runs the long_500k shape (O(1) state per decode step)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    num_layers=24, d_model=768, num_heads=12, num_kv_heads=12, head_dim=64,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+    tie_embeddings=True,
+    train_microbatches=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m-smoke", family="ssm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=0, vocab_size=256,
+        ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_chunk=32,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,22 @@
+"""Nemotron-4-340B [arXiv:2402.16819] — dense, GQA, squared-ReLU MLP.
+
+340B params: bf16 Adam moments (optimizer_state_dtype) keep the per-chip
+footprint inside 16 GB HBM on the 256-chip pod (DESIGN.md §5)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b", family="dense",
+    num_layers=96, d_model=18432, num_heads=96, num_kv_heads=8, head_dim=192,
+    d_ff=73728, vocab_size=256000,
+    mlp="relu2", rope_theta=10000.0,
+    train_microbatches=8, optimizer_state_dtype="bfloat16",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b-smoke", family="dense",
+        num_layers=2, d_model=96, num_heads=4, num_kv_heads=2, head_dim=24,
+        d_ff=192, vocab_size=256, mlp="relu2",
+    )

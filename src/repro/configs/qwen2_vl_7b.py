@@ -1,0 +1,23 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — VLM backbone with M-RoPE; the vision
+frontend is a STUB (input_specs feeds precomputed patch embeddings for the
+first seq_len/8 positions plus the (3, B, S) M-RoPE position grid)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064,
+    mlp="silu_glu", mrope=True, mrope_sections=(16, 24, 24),
+    rope_theta=1e6, vision_frac=8,
+    train_microbatches=2,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256,
+        mlp="silu_glu", mrope=True, mrope_sections=(2, 3, 3),
+    )

@@ -1,0 +1,19 @@
+"""Qwen3-14B [hf:Qwen/Qwen3-8B family] — dense, GQA, qk_norm."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=17408, vocab_size=151936,
+    mlp="silu_glu", qk_norm=True, rope_theta=1e6,
+    train_microbatches=2,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-14b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, mlp="silu_glu", qk_norm=True,
+    )

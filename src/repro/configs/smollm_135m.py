@@ -1,0 +1,19 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M] — llama-arch small dense LM."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3, head_dim=64,
+    d_ff=1536, vocab_size=49152,
+    mlp="silu_glu", tie_embeddings=True, rope_theta=10000.0,
+    train_microbatches=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-135m-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, mlp="silu_glu", tie_embeddings=True,
+    )

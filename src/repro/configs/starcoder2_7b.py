@@ -1,0 +1,19 @@
+"""StarCoder2-7B [arXiv:2402.19173] — dense, GQA, RoPE, gelu MLP."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    num_layers=32, d_model=4608, num_heads=36, num_kv_heads=4, head_dim=128,
+    d_ff=18432, vocab_size=49152,
+    mlp="gelu", rope_theta=1e5,
+    train_microbatches=2,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=256, mlp="gelu",
+    )

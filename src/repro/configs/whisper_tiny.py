@@ -1,0 +1,22 @@
+"""Whisper-tiny [arXiv:2212.04356] — enc-dec; conv audio frontend is a STUB
+(input_specs feeds precomputed frame embeddings)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    num_layers=4, encoder_layers=4,
+    d_model=384, num_heads=6, num_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab_size=51865,
+    mlp="gelu", tie_embeddings=True,
+    train_microbatches=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny-smoke", family="encdec",
+        num_layers=2, encoder_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, mlp="gelu", tie_embeddings=True,
+    )

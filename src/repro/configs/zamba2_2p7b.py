@@ -1,0 +1,24 @@
+"""Zamba2-2.7B [arXiv:2411.15242] — Mamba2 backbone + shared attention block
+every 6 SSM layers (shared weights; LoRA adapters omitted, see DESIGN.md)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=128,
+    hybrid_attn_period=6,
+    mlp="silu_glu",
+    train_microbatches=1,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b-smoke", family="hybrid",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256,
+        ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_chunk=32,
+        hybrid_attn_period=2, mlp="silu_glu",
+    )

@@ -1,0 +1,39 @@
+"""Odyssey: automatic design-space exploration for systolic arrays.
+
+The paper's primary contribution as a composable library.  See DESIGN.md for
+the FPGA->TPU adaptation and `repro.kernels.autotune` for the TPU-side
+application of the same machinery to Pallas block shapes.
+"""
+
+from .hardware import U250, TPU_V5E, HardwareProfile, DTYPE_BYTES
+from .workloads import (Workload, Loop, ArrayRef, matmul, conv2d,
+                        mm_1024, mm_validation, cnn_validation,
+                        vgg16_convs, resnet50_convs,
+                        VGG16_LAYERS, RESNET50_LAYERS)
+from .design_space import (Genome, GenomeSpace, Permutation, DesignPoint,
+                           enumerate_dataflows, pruned_permutations,
+                           all_permutations, enumerate_designs, divisors)
+from .descriptor import (DesignDescriptor, build_descriptor,
+                         descriptor_to_json)
+from .perf_model import PerformanceModel, Resources, LatencyReport, \
+    generate_model_source
+from .simulator import simulate, SimReport
+from .evolutionary import EvoConfig, EvoResult, TilingProblem, evolve
+from . import mp_solver, baselines
+from .tuner import tune_design, tune_workload, TuneReport, DesignResult
+
+__all__ = [
+    "U250", "TPU_V5E", "HardwareProfile", "DTYPE_BYTES",
+    "Workload", "Loop", "ArrayRef", "matmul", "conv2d",
+    "mm_1024", "mm_validation", "cnn_validation",
+    "vgg16_convs", "resnet50_convs", "VGG16_LAYERS", "RESNET50_LAYERS",
+    "Genome", "GenomeSpace", "Permutation", "DesignPoint",
+    "enumerate_dataflows", "pruned_permutations", "all_permutations",
+    "enumerate_designs", "divisors",
+    "DesignDescriptor", "build_descriptor", "descriptor_to_json",
+    "PerformanceModel", "Resources", "LatencyReport", "generate_model_source",
+    "simulate", "SimReport",
+    "EvoConfig", "EvoResult", "TilingProblem", "evolve",
+    "mp_solver", "baselines",
+    "tune_design", "tune_workload", "TuneReport", "DesignResult",
+]

@@ -1,0 +1,227 @@
+"""Design descriptors: the compiler-generated hardware description.
+
+In the paper, Odyssey extends AutoSA to dump a *design descriptor* per
+(dataflow, permutation) design — ASTs of all hardware modules, memory info,
+compute info, array topology and the tunable parameters — from which the
+auto-tuner generates symbolic performance models.
+
+Here the "compiler" is :func:`build_descriptor`: given a workload, a dataflow
+(space loops) and an array-partitioning permutation it derives the same
+structural facts analytically:
+
+  * the loop-nest AST of the array-partition band (tile counts symbolic),
+  * one I/O module group per array (direction, banking, whether the
+    permutation forces intermediate-result reload — the paper's ``C(in)``
+    modules),
+  * the PE compute module (SIMD lane structure, MAC op),
+  * the reuse analysis that drives the data-movement model: for each array,
+    the innermost position of its subscript loops in the band (``maxpos``)
+    determines at which odometer carry depths its tile must be (re)loaded.
+
+Everything downstream (perf_model, simulator, the emitted Python model file)
+consumes only this descriptor, mirroring the paper's architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+from .design_space import Genome, Permutation
+from .workloads import ArrayRef, Workload
+from .hardware import DTYPE_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayInfo:
+    """Reuse/traffic structure of one array under a given permutation."""
+
+    name: str
+    is_output: bool
+    dims: Tuple[Tuple[str, ...], ...]
+    access_loops: Tuple[str, ...]
+    # 1-based innermost position of any access loop in the band order
+    maxpos: int
+    # flow-dependence loops located at positions <= maxpos ("outer" flow
+    # loops).  Non-empty iff the permutation forces partial results off-chip,
+    # i.e. AutoSA would instantiate the extra C(in) I/O modules.
+    outer_flow_loops: Tuple[str, ...]
+
+    @property
+    def needs_inbound_partials(self) -> bool:
+        return self.is_output and bool(self.outer_flow_loops)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModuleInfo:
+    """One hardware module group (I/O or PE)."""
+
+    name: str
+    kind: str                  # "io_in" | "io_out" | "pe"
+    array: Optional[str]       # for I/O modules
+
+
+@dataclasses.dataclass(frozen=True)
+class AstNode:
+    """Minimal loop-nest AST of the array-partitioning band."""
+
+    loop: str                  # loop name, tile-count bound is symbolic n0_<loop>
+    body: Tuple["AstNode", ...] = ()
+    stmt: str = ""             # leaf statement label
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignDescriptor:
+    workload: Workload
+    dataflow: Tuple[str, ...]
+    permutation: Permutation
+    arrays: Tuple[ArrayInfo, ...]
+    modules: Tuple[ModuleInfo, ...]
+    ast: AstNode
+    dtype_bytes: int
+
+    # ------------------------------------------------------------------ #
+    # Genome-dependent structural queries (symbolic in the tuning params)
+    # ------------------------------------------------------------------ #
+    def pe_dims(self, g: Genome) -> Tuple[int, ...]:
+        """Systolic-array shape: n1 of each space loop."""
+        return tuple(g.triples[l][1] for l in self.dataflow)
+
+    def num_pes(self, g: Genome) -> int:
+        n = 1
+        for d in self.pe_dims(g):
+            n *= d
+        return n
+
+    def simd(self, g: Genome) -> int:
+        return g.t2(self.workload.simd_loop)
+
+    def tile_elems(self, arr: ArrayInfo, g: Genome) -> int:
+        """On-chip tile footprint of one array-partition tile of ``arr``.
+
+        Sliding-window dims (e.g. ``h+p``) occupy ``T_h + T_p - 1``.
+        """
+        n = 1
+        for dim in arr.dims:
+            size = sum(g.t1(l) for l in dim) - (len(dim) - 1)
+            n *= size
+        return n
+
+    def tile_bytes(self, arr: ArrayInfo, g: Genome) -> int:
+        return self.tile_elems(arr, g) * self.dtype_bytes
+
+    def band_counts(self, g: Genome) -> Tuple[int, ...]:
+        """Tile counts (n0) in band order."""
+        return tuple(g.n_tiles(l) for l in self.permutation.order)
+
+    def num_tiles(self, g: Genome) -> int:
+        n = 1
+        for c in self.band_counts(g):
+            n *= c
+        return n
+
+    def array_info(self, name: str) -> ArrayInfo:
+        for a in self.arrays:
+            if a.name == name:
+                return a
+        raise KeyError(name)
+
+    # -- traffic event counts (exact odometer analysis) ------------------- #
+    def prefix_product(self, g: Genome, pos: int) -> int:
+        """Product of tile counts at band positions 1..pos (P_pos)."""
+        n = 1
+        for c in self.band_counts(g)[:pos]:
+            n *= c
+        return n
+
+    def load_events(self, arr: ArrayInfo, g: Genome) -> int:
+        """Inbound transfers for ``arr`` over the whole execution.
+
+        Inputs: the tile must be reloaded whenever any subscript loop ticks,
+        i.e. once per iteration of the band prefix down to ``maxpos``.
+        Outputs: partial results are re-read only when an outer flow loop is
+        revisiting a previously-written tile.
+        """
+        episodes = self.prefix_product(g, arr.maxpos)
+        if not arr.is_output:
+            return episodes
+        if not arr.outer_flow_loops:
+            return 0
+        fresh = episodes
+        for f in arr.outer_flow_loops:
+            fresh //= g.n_tiles(f)
+        return episodes - fresh
+
+    def store_events(self, arr: ArrayInfo, g: Genome) -> int:
+        if not arr.is_output:
+            return 0
+        return self.prefix_product(g, arr.maxpos)
+
+    def io_banks(self, arr: ArrayInfo, g: Genome) -> int:
+        """I/O module banking: one bank per PE row/column the array feeds."""
+        n = 1
+        for l in self.dataflow:
+            if l in arr.access_loops:
+                n *= g.triples[l][1]
+        return max(1, n)
+
+
+# ---------------------------------------------------------------------- #
+def build_descriptor(wl: Workload, dataflow: Tuple[str, ...],
+                     perm: Permutation) -> DesignDescriptor:
+    order = perm.order
+    pos = {l: i + 1 for i, l in enumerate(order)}
+    red = set(wl.reduction_loops)
+
+    arrays: List[ArrayInfo] = []
+    for a in wl.arrays:
+        maxpos = max(pos[l] for l in a.access_loops)
+        outer_flow = tuple(l for l in order
+                           if l in red and l in wl.rl(a) and pos[l] <= maxpos) \
+            if a.is_output else ()
+        arrays.append(ArrayInfo(
+            name=a.name, is_output=a.is_output, dims=a.dims,
+            access_loops=a.access_loops, maxpos=maxpos,
+            outer_flow_loops=outer_flow))
+
+    modules: List[ModuleInfo] = [ModuleInfo("PE", "pe", None)]
+    for a in arrays:
+        if a.is_output:
+            modules.append(ModuleInfo(f"io_{a.name}_out", "io_out", a.name))
+            if a.needs_inbound_partials:
+                modules.append(ModuleInfo(f"io_{a.name}_in", "io_in", a.name))
+        else:
+            modules.append(ModuleInfo(f"io_{a.name}_in", "io_in", a.name))
+
+    node = AstNode(loop="", stmt="tile(load; compute; drain)")
+    for l in reversed(order):
+        node = AstNode(loop=l, body=(node,))
+
+    return DesignDescriptor(
+        workload=wl, dataflow=tuple(dataflow), permutation=perm,
+        arrays=tuple(arrays), modules=tuple(modules), ast=node,
+        dtype_bytes=DTYPE_BYTES[wl.dtype])
+
+
+# ---------------------------------------------------------------------- #
+def descriptor_to_json(d: DesignDescriptor) -> str:
+    """Serialize the descriptor (the paper's design-description file)."""
+
+    def ast(n: AstNode):
+        if not n.loop:
+            return {"stmt": n.stmt}
+        return {"loop": n.loop, "bound": f"n0_{n.loop}",
+                "body": [ast(b) for b in n.body]}
+
+    return json.dumps({
+        "workload": d.workload.name,
+        "dataflow": list(d.dataflow),
+        "permutation": d.permutation.label(),
+        "tuning_parameters": [f"{l}.{lv}" for l in d.workload.loop_names
+                              for lv in (0, 1, 2)],
+        "arrays": [dataclasses.asdict(a) for a in d.arrays],
+        "modules": [dataclasses.asdict(m) for m in d.modules],
+        "ast": ast(d.ast),
+        "dtype_bytes": d.dtype_bytes,
+    }, indent=2, default=list)

@@ -1,0 +1,324 @@
+"""Design-space construction: dataflows, loop permutations, tiling genomes.
+
+This module mirrors the paper's §3:
+
+  * **Dataflows** (space-time mappings): every 1-D / 2-D choice of space loops
+    among the workload's spatial candidates (paper Table 2: 6 for MM, 10 for
+    CNN).
+  * **Loop permutations** of the array-partitioning band, pruned by the
+    paper's Theorem 3.1: the only orderings that can be Pareto-optimal are
+    ``<NRL(r), RL(r)>`` for each array reference ``r`` — placing the loops
+    that carry the read/flow dependences of ``r`` innermost (3 orderings for
+    both MM and CNN).
+  * **Tiling genomes**: per original loop, a level triple ``(n0, n1, n2)``
+    with padded bound ``n0*n1*n2 >= N``:
+        - ``T1 = n1*n2``  : array-partitioning tile (may be a *non-divisor*
+          of ``N``; the domain is zero-padded to ``n0*T1``),
+        - ``T2 = n2``     : latency-hiding / SIMD tile; by construction
+          ``T2 | T1``, which structurally enforces the paper's rule that
+          latency-hiding and SIMD factors are divisors.
+    The space-loop array dimension is ``n1`` PEs; the SIMD loop's ``n2`` is
+    the vector width (clamped to a power of two <= simd_max).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .workloads import Workload
+
+Triple = Tuple[int, int, int]
+
+
+# ---------------------------------------------------------------------- #
+# Dataflows
+# ---------------------------------------------------------------------- #
+def enumerate_dataflows(wl: Workload, max_dims: int = 2) -> List[Tuple[str, ...]]:
+    """All 1..max_dims-dimensional space-loop selections (paper Table 2)."""
+    out: List[Tuple[str, ...]] = []
+    cands = wl.spatial_candidates
+    for r in range(1, max_dims + 1):
+        for combo in itertools.combinations(cands, r):
+            out.append(tuple(combo))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Loop permutations + Theorem 3.1 pruning
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class Permutation:
+    """An equivalence class of array-partition loop orderings.
+
+    ``outer``/``inner`` are the two freely-permutable brackets of the
+    paper's ``<NRL(r), RL(r)>`` notation.  ``order`` is one canonical
+    concrete ordering (performance is invariant within brackets).
+    """
+
+    outer: Tuple[str, ...]
+    inner: Tuple[str, ...]
+
+    @property
+    def order(self) -> Tuple[str, ...]:
+        return self.outer + self.inner
+
+    def label(self) -> str:
+        if not self.inner:
+            return "<[%s]>" % ",".join(self.outer)
+        return "<[%s],[%s]>" % (",".join(self.outer), ",".join(self.inner))
+
+
+def pruned_permutations(wl: Workload) -> List[Permutation]:
+    """Theorem 3.1: one ordering per array reference, RL(r) innermost."""
+    seen = {}
+    names = wl.loop_names
+    for arr in wl.arrays:
+        rl = wl.rl(arr)
+        nrl = tuple(l for l in names if l not in rl)
+        key = (frozenset(nrl), frozenset(rl))
+        if key not in seen:
+            seen[key] = Permutation(outer=nrl, inner=rl)
+    return list(seen.values())
+
+
+def all_permutations(wl: Workload) -> List[Permutation]:
+    """Unpruned N! orderings (for validating the pruning experimentally)."""
+    return [Permutation(outer=p, inner=())
+            for p in itertools.permutations(wl.loop_names)]
+
+
+# ---------------------------------------------------------------------- #
+# Tiling genome
+# ---------------------------------------------------------------------- #
+def _pow2_floor(x: int) -> int:
+    return 1 << max(0, x.bit_length() - 1)
+
+
+def divisors(n: int) -> List[int]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append(d)
+            if d != n // d:
+                out.append(n // d)
+        d += 1
+    return sorted(out)
+
+
+@dataclasses.dataclass
+class Genome:
+    """Tiling factors for one (workload, dataflow, permutation) design."""
+
+    triples: Dict[str, Triple]  # loop name -> (n0, n1, n2)
+
+    def copy(self) -> "Genome":
+        return Genome(dict(self.triples))
+
+    def t1(self, loop: str) -> int:
+        _, n1, n2 = self.triples[loop]
+        return n1 * n2
+
+    def t2(self, loop: str) -> int:
+        return self.triples[loop][2]
+
+    def n_tiles(self, loop: str) -> int:
+        return self.triples[loop][0]
+
+    def padded_bound(self, loop: str) -> int:
+        n0, n1, n2 = self.triples[loop]
+        return n0 * n1 * n2
+
+    def key(self) -> Tuple:
+        return tuple(sorted(self.triples.items()))
+
+    def as_dict(self) -> Dict[str, Triple]:
+        return dict(self.triples)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """A fully-specified design: dataflow x permutation x tiling."""
+
+    dataflow: Tuple[str, ...]
+    permutation: Permutation
+    genome: Genome
+
+    def label(self) -> str:
+        return "[%s] %s" % (",".join(self.dataflow), self.permutation.label())
+
+
+class GenomeSpace:
+    """Sampling, legalization and structural queries for genomes.
+
+    The genome levels are interpreted per loop *role* (given a dataflow):
+      * space loop           : n1 = PE-array dimension, n2 = latency-hiding
+      * parallel time loop   : n2 = register-tile (latency hiding)
+      * SIMD loop            : n2 = vector width (power of two <= simd_max)
+      * other reduction loop : n2 = 1
+    """
+
+    def __init__(self, wl: Workload, dataflow: Tuple[str, ...],
+                 divisors_only: bool = False):
+        self.wl = wl
+        self.dataflow = tuple(dataflow)
+        self.divisors_only = divisors_only
+
+    # -- structural roles ------------------------------------------------
+    def is_space(self, loop: str) -> bool:
+        return loop in self.dataflow
+
+    def has_level2(self, loop: str) -> bool:
+        l = self.wl.loop(loop)
+        return l.parallel or loop == self.wl.simd_loop
+
+    # -- legalization ------------------------------------------------------
+    def legalize(self, g: Genome) -> Genome:
+        out: Dict[str, Triple] = {}
+        for l in self.wl.loops:
+            n0, n1, n2 = g.triples[l.name]
+            n1, n2 = max(1, n1), max(1, n2)
+            if not self.has_level2(l.name):
+                n1, n2 = n1 * n2, 1
+            if l.name == self.wl.simd_loop:
+                n2 = min(_pow2_floor(n2), self.wl.simd_max)
+            # keep tiles within the original bound
+            while n1 * n2 > l.bound and n1 > 1:
+                n1 = max(1, math.ceil(l.bound / n2))
+                break
+            if n1 * n2 > l.bound:
+                if l.name == self.wl.simd_loop:
+                    n2 = min(_pow2_floor(max(1, l.bound)), self.wl.simd_max)
+                else:
+                    n2 = max(1, l.bound)
+                n1 = 1
+            if self.divisors_only:
+                n1, n2 = self._snap_divisors(l.bound, n1, n2)
+            # derived tile count: smallest cover of the (possibly padded) domain
+            n0 = max(1, math.ceil(l.bound / (n1 * n2)))
+            out[l.name] = (n0, n1, n2)
+        return Genome(out)
+
+    def _snap_divisors(self, bound: int, n1: int, n2: int) -> Tuple[int, int]:
+        divs = divisors(bound)
+        t1 = n1 * n2
+        t1 = max(d for d in divs if d <= t1)
+        d2 = [d for d in divisors(t1) if d <= n2]
+        n2 = max(d2) if d2 else 1
+        return t1 // n2, n2
+
+    # -- sampling ----------------------------------------------------------
+    def sample(self, rng: random.Random) -> Genome:
+        triples: Dict[str, Triple] = {}
+        for l in self.wl.loops:
+            if self.divisors_only:
+                t1 = rng.choice(divisors(l.bound))
+            else:
+                t1 = rng.randint(1, l.bound)
+            if self.has_level2(l.name):
+                if l.name == self.wl.simd_loop:
+                    opts = [d for d in (1, 2, 4, 8, 16)
+                            if d <= min(t1, self.wl.simd_max)]
+                    n2 = rng.choice(opts)
+                    n1 = max(1, t1 // n2)
+                else:
+                    n2 = rng.choice(divisors(t1))
+                    n1 = t1 // n2
+            else:
+                n1, n2 = t1, 1
+            triples[l.name] = (1, n1, n2)
+        return self.legalize(Genome(triples))
+
+    # -- mutation (paper §4.1) ----------------------------------------------
+    def mutate(self, g: Genome, rng: random.Random,
+               alpha: float = 0.4) -> Genome:
+        """Hybrid mutation: factorization-based w.p. alpha, else random."""
+        if rng.random() < alpha or self.divisors_only:
+            out = self._mutate_factorization(g, rng)
+        else:
+            out = self._mutate_random(g, rng)
+        return self.legalize(out)
+
+    def _mutate_factorization(self, g: Genome, rng: random.Random) -> Genome:
+        """Move a divisor between two levels of the same loop.
+
+        Keeps the level product unchanged, so divisor-tilings stay divisor
+        tilings — the paper's 'factorization-based mutation'.
+        """
+        out = g.copy()
+        loop = rng.choice(self.wl.loop_names)
+        levels = list(out.triples[loop])
+        a, b = rng.sample(range(3), 2)
+        divs = [d for d in divisors(levels[a]) if d > 1]
+        if not divs:
+            return out
+        alpha = rng.choice(divs)
+        levels[a] //= alpha
+        levels[b] *= alpha
+        out.triples[loop] = (levels[0], levels[1], levels[2])
+        return out
+
+    def _mutate_random(self, g: Genome, rng: random.Random) -> Genome:
+        """Random non-divisor mutation (paper §4.1, 'random mutation').
+
+        Pick a level, set it to s in [1, cur]; compensate a sibling level with
+        ceil(cur*sib/s) so the padded product never shrinks below N (legality).
+        """
+        out = g.copy()
+        loop = rng.choice(self.wl.loop_names)
+        levels = list(out.triples[loop])
+        a, b = rng.sample(range(3), 2)
+        cur = levels[a]
+        s = rng.randint(1, max(1, cur))
+        levels[b] = math.ceil(cur * levels[b] / s)
+        levels[a] = s
+        out.triples[loop] = (levels[0], levels[1], levels[2])
+        return out
+
+    # -- crossover -----------------------------------------------------------
+    def crossover(self, a: Genome, b: Genome, rng: random.Random) -> Genome:
+        """Exchange whole per-loop triples (paper: factors of the same
+        original loop move together, guaranteeing valid offspring)."""
+        triples: Dict[str, Triple] = {}
+        for l in self.wl.loop_names:
+            triples[l] = (a if rng.random() < 0.5 else b).triples[l]
+        return self.legalize(Genome(triples))
+
+    # -- exhaustive enumeration (divisor sub-space, for reference search) -----
+    def enumerate_divisor_genomes(self, max_count: Optional[int] = None
+                                  ) -> Iterable[Genome]:
+        per_loop: List[List[Triple]] = []
+        for l in self.wl.loops:
+            opts: List[Triple] = []
+            for t1 in divisors(l.bound):
+                if self.has_level2(l.name):
+                    if l.name == self.wl.simd_loop:
+                        n2s = [d for d in (1, 2, 4, 8, 16)
+                               if t1 % d == 0 and d <= self.wl.simd_max]
+                    else:
+                        n2s = divisors(t1)
+                else:
+                    n2s = [1]
+                for n2 in n2s:
+                    opts.append((l.bound // t1, t1 // n2, n2))
+            per_loop.append(opts)
+        count = 0
+        for combo in itertools.product(*per_loop):
+            yield Genome({l.name: combo[idx]
+                          for idx, l in enumerate(self.wl.loops)})
+            count += 1
+            if max_count is not None and count >= max_count:
+                return
+
+
+def enumerate_designs(wl: Workload) -> List[Tuple[Tuple[str, ...], Permutation]]:
+    """All (dataflow, pruned permutation) pairs — 18 for MM, 30 for CNN."""
+    out = []
+    for df in enumerate_dataflows(wl):
+        for perm in pruned_permutations(wl):
+            out.append((df, perm))
+    return out

@@ -1,0 +1,150 @@
+"""Evolutionary search (paper §4.1) over a generic genome problem.
+
+The engine is deliberately problem-agnostic: the systolic tiling space
+(``GenomeSpace``) and the TPU Pallas block space (``kernels.autotune``) plug
+in the same interface, which is the paper's Lesson 3 ("the methodology is
+general") made executable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Callable, Generic, List, Optional, Sequence, Tuple, TypeVar
+
+G = TypeVar("G")
+
+
+@dataclasses.dataclass
+class EvoConfig:
+    population: int = 64
+    parents: int = 16
+    elites: int = 4
+    mutation_alpha: float = 0.4      # P(factorization-based) — paper default
+    crossover_rate: float = 0.6
+    epochs: int = 200
+    seed: int = 0
+    time_budget_s: Optional[float] = None
+    max_evals: Optional[int] = None
+
+
+@dataclasses.dataclass
+class TraceEntry:
+    evals: int
+    seconds: float
+    best_fitness: float
+
+
+@dataclasses.dataclass
+class EvoResult(Generic[G]):
+    best: G
+    best_fitness: float
+    evals: int
+    seconds: float
+    trace: List[TraceEntry]
+
+
+class Problem(Generic[G]):
+    """Interface the evolutionary engine requires."""
+
+    def sample(self, rng: random.Random) -> G:
+        raise NotImplementedError
+
+    def mutate(self, g: G, rng: random.Random, alpha: float) -> G:
+        raise NotImplementedError
+
+    def crossover(self, a: G, b: G, rng: random.Random) -> G:
+        raise NotImplementedError
+
+    def fitness(self, g: G) -> float:
+        raise NotImplementedError
+
+    def key(self, g: G) -> Tuple:
+        raise NotImplementedError
+
+
+def evolve(problem: Problem[G], cfg: EvoConfig,
+           seeds: Sequence[G] = ()) -> EvoResult[G]:
+    rng = random.Random(cfg.seed)
+    t0 = time.perf_counter()
+    evals = 0
+    cache = {}
+
+    def fit(g: G) -> float:
+        nonlocal evals
+        k = problem.key(g)
+        if k in cache:
+            return cache[k]
+        evals += 1
+        f = problem.fitness(g)
+        cache[k] = f
+        return f
+
+    pop: List[G] = list(seeds)[:cfg.population]
+    while len(pop) < cfg.population:
+        pop.append(problem.sample(rng))
+
+    scored = sorted(((fit(g), i, g) for i, g in enumerate(pop)),
+                    key=lambda t: -t[0])
+    best_f, _, best = scored[0]
+    trace = [TraceEntry(evals, time.perf_counter() - t0, best_f)]
+
+    def out_of_budget() -> bool:
+        if cfg.time_budget_s is not None and \
+                time.perf_counter() - t0 >= cfg.time_budget_s:
+            return True
+        if cfg.max_evals is not None and evals >= cfg.max_evals:
+            return True
+        return False
+
+    for _ in range(cfg.epochs):
+        if out_of_budget():
+            break
+        parents = [g for _, _, g in scored[:cfg.parents]]
+        children: List[G] = [g for _, _, g in scored[:cfg.elites]]
+        while len(children) < cfg.population:
+            if rng.random() < cfg.crossover_rate and len(parents) >= 2:
+                a, b = rng.sample(range(len(parents)), 2)
+                child = problem.crossover(parents[a], parents[b], rng)
+            else:
+                child = parents[rng.randrange(len(parents))]
+            child = problem.mutate(child, rng, cfg.mutation_alpha)
+            children.append(child)
+        scored = sorted(((fit(g), i, g) for i, g in enumerate(children)),
+                        key=lambda t: -t[0])
+        if scored[0][0] > best_f:
+            best_f, _, best = scored[0]
+        trace.append(TraceEntry(evals, time.perf_counter() - t0, best_f))
+
+    return EvoResult(best=best, best_fitness=best_f, evals=evals,
+                     seconds=time.perf_counter() - t0, trace=trace)
+
+
+# ---------------------------------------------------------------------- #
+# Adapter binding a GenomeSpace + PerformanceModel to the Problem interface
+# ---------------------------------------------------------------------- #
+class TilingProblem(Problem):
+    def __init__(self, space, model, use_max_model: bool = False,
+                 fitness_fn: Optional[Callable] = None):
+        self.space = space
+        self.model = model
+        self.use_max_model = use_max_model
+        self.fitness_fn = fitness_fn
+
+    def sample(self, rng):
+        return self.space.sample(rng)
+
+    def mutate(self, g, rng, alpha):
+        return self.space.mutate(g, rng, alpha)
+
+    def crossover(self, a, b, rng):
+        return self.space.crossover(a, b, rng)
+
+    def fitness(self, g):
+        if self.fitness_fn is not None:
+            return self.fitness_fn(g)
+        return self.model.fitness(g, use_max_model=self.use_max_model)
+
+    def key(self, g):
+        return g.key()

@@ -1,0 +1,120 @@
+"""The Odyssey two-stage auto-tuner (paper Fig. 2).
+
+Flow per (dataflow, permutation) design:
+  1. construct the design descriptor (compiler step, ``descriptor.py``),
+  2. generate the performance models (``perf_model.py``),
+  3. MP-based optimizer (Obj3) produces seed designs (``mp_solver.py``),
+  4. evolutionary search with hybrid mutation refines them
+     (``evolutionary.py``).
+
+``tune_workload`` runs the flow over every design of the pruned design space
+(18 for MM, 30 for CNN) and returns the per-design winners plus the global
+best — exactly what the paper's Figs. 7/9/10 report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from . import mp_solver
+from .descriptor import DesignDescriptor, build_descriptor
+from .design_space import (DesignPoint, Genome, GenomeSpace, Permutation,
+                           enumerate_designs)
+from .evolutionary import EvoConfig, EvoResult, TilingProblem, evolve
+from .hardware import HardwareProfile, U250
+from .perf_model import PerformanceModel
+from .workloads import Workload
+
+
+@dataclasses.dataclass
+class DesignResult:
+    design: DesignPoint
+    descriptor: DesignDescriptor
+    model: PerformanceModel
+    evo: EvoResult
+    latency_cycles: float
+    throughput: float
+    dsp: int
+    bram: int
+    feasible: bool
+    seconds: float
+
+    def summary(self) -> Dict:
+        return {
+            "design": self.design.label(),
+            "latency_cycles": self.latency_cycles,
+            "throughput_gflops": self.throughput / 1e9,
+            "dsp": self.dsp,
+            "bram": self.bram,
+            "feasible": self.feasible,
+            "evals": self.evo.evals,
+            "seconds": round(self.seconds, 3),
+            "tiling": self.evo.best.as_dict(),
+        }
+
+
+@dataclasses.dataclass
+class TuneReport:
+    workload: str
+    results: List[DesignResult]
+
+    @property
+    def best(self) -> DesignResult:
+        feas = [r for r in self.results if r.feasible]
+        pool = feas if feas else self.results
+        return min(pool, key=lambda r: r.latency_cycles)
+
+
+def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
+                hw: HardwareProfile = U250,
+                cfg: Optional[EvoConfig] = None,
+                use_mp_seed: bool = True,
+                mp_objective: str = "obj3_comm_comp",
+                divisors_only: bool = False) -> DesignResult:
+    """Tune the tiling of a single (dataflow, permutation) design."""
+    t0 = time.perf_counter()
+    cfg = cfg or EvoConfig()
+    desc = build_descriptor(wl, dataflow, perm)
+    model = PerformanceModel(desc, hw)
+    space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
+
+    seeds: List[Genome] = []
+    if use_mp_seed:
+        seeds = mp_solver.seed_population(
+            space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
+            seed=cfg.seed)
+
+    evo = evolve(TilingProblem(space, model), cfg, seeds=seeds)
+    g = evo.best
+    rep = model.latency(g)
+    res = model.resources(g)
+    return DesignResult(
+        design=DesignPoint(dataflow, perm, g),
+        descriptor=desc, model=model, evo=evo,
+        latency_cycles=rep.cycles,
+        throughput=model.throughput(g),
+        dsp=res.dsp, bram=res.bram,
+        feasible=model.feasible(g),
+        seconds=time.perf_counter() - t0,
+    )
+
+
+def tune_workload(wl: Workload, hw: HardwareProfile = U250,
+                  cfg: Optional[EvoConfig] = None,
+                  use_mp_seed: bool = True,
+                  time_budget_s: Optional[float] = None,
+                  divisors_only: bool = False) -> TuneReport:
+    """Run the full Odyssey flow over the pruned design space."""
+    designs = enumerate_designs(wl)
+    cfg = cfg or EvoConfig()
+    if time_budget_s is not None:
+        per = time_budget_s / len(designs)
+        cfg = EvoConfig(**{**cfg.__dict__, "time_budget_s": per})
+    results = []
+    for df, perm in designs:
+        results.append(tune_design(wl, df, perm, hw=hw, cfg=cfg,
+                                   use_mp_seed=use_mp_seed,
+                                   divisors_only=divisors_only))
+    return TuneReport(workload=wl.name, results=results)

@@ -1,0 +1,213 @@
+"""Workload descriptions: the loop-nest programs mapped to systolic arrays.
+
+A :class:`Workload` is the Odyssey-side analog of the C program AutoSA takes
+as input: a perfectly-nested loop program with affine array references over a
+rectangular iteration domain (the paper's stated scope, see its §7).
+
+The dependence classification used by the loop-permutation pruning
+(paper Theorem 3.1) is derived here:
+
+  * a loop *carries the flow dependence* for an output array if it is a
+    reduction loop not appearing in the array's subscripts (e.g. ``k`` for
+    ``C`` in MM);
+  * a loop *carries the read dependence* for an input array if it does not
+    appear in the array's subscripts (the data is reused along it, e.g. ``j``
+    for ``A`` in MM).
+
+Both are "the loops under which the array tile stays live", i.e. exactly the
+complement of the subscript loops — the set the paper calls ``RL(r)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    name: str
+    bound: int
+    parallel: bool  # False => reduction loop
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayRef:
+    """An array reference; each dim subscripts one or more loops.
+
+    ``dims`` is a tuple of tuples of loop names.  A dim with several loops
+    models a sliding-window subscript like ``h + p`` in a convolution whose
+    tile extent is ``T_h + T_p - 1``.
+    """
+
+    name: str
+    dims: Tuple[Tuple[str, ...], ...]
+    is_output: bool = False
+
+    @property
+    def access_loops(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for d in self.dims:
+            for l in d:
+                if l not in out:
+                    out.append(l)
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    loops: Tuple[Loop, ...]
+    arrays: Tuple[ArrayRef, ...]
+    # which loops may be chosen as space loops (AutoSA legality: uniform deps)
+    spatial_candidates: Tuple[str, ...]
+    # the single loop that SIMD vectorization applies to (paper §2.3)
+    simd_loop: str
+    dtype: str = "fp32"
+    simd_max: int = 16
+
+    # ------------------------------------------------------------------ #
+    def loop(self, name: str) -> Loop:
+        for l in self.loops:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    @property
+    def loop_names(self) -> Tuple[str, ...]:
+        return tuple(l.name for l in self.loops)
+
+    @property
+    def bounds(self) -> Dict[str, int]:
+        return {l.name: l.bound for l in self.loops}
+
+    @property
+    def parallel_loops(self) -> Tuple[str, ...]:
+        return tuple(l.name for l in self.loops if l.parallel)
+
+    @property
+    def reduction_loops(self) -> Tuple[str, ...]:
+        return tuple(l.name for l in self.loops if not l.parallel)
+
+    def rl(self, array: ArrayRef) -> Tuple[str, ...]:
+        """Loops carrying read/flow dependences for ``array`` (paper RL(r))."""
+        acc = set(array.access_loops)
+        return tuple(l.name for l in self.loops if l.name not in acc)
+
+    def total_macs(self) -> int:
+        n = 1
+        for l in self.loops:
+            n *= l.bound
+        return n
+
+    def flops(self) -> int:
+        return 2 * self.total_macs()
+
+
+# ---------------------------------------------------------------------- #
+# Factories
+# ---------------------------------------------------------------------- #
+def matmul(i: int, j: int, k: int, dtype: str = "fp32") -> Workload:
+    """C[i,j] += A[i,k] * B[k,j]."""
+    return Workload(
+        name=f"mm_{i}x{j}x{k}",
+        loops=(
+            Loop("i", i, parallel=True),
+            Loop("j", j, parallel=True),
+            Loop("k", k, parallel=False),
+        ),
+        arrays=(
+            ArrayRef("A", (("i",), ("k",))),
+            ArrayRef("B", (("k",), ("j",))),
+            ArrayRef("C", (("i",), ("j",)), is_output=True),
+        ),
+        spatial_candidates=("i", "j", "k"),
+        simd_loop="k",
+        dtype=dtype,
+    )
+
+
+def conv2d(i: int, o: int, h: int, w: int, p: int, q: int,
+           dtype: str = "fp32") -> Workload:
+    """fo[o,h,w] += fi[i,h+p,w+q] * wgt[o,i,p,q]  (batch 1, stride 1)."""
+    return Workload(
+        name=f"conv_i{i}_o{o}_h{h}_w{w}_p{p}_q{q}",
+        loops=(
+            Loop("o", o, parallel=True),
+            Loop("h", h, parallel=True),
+            Loop("w", w, parallel=True),
+            Loop("i", i, parallel=False),
+            Loop("p", p, parallel=False),
+            Loop("q", q, parallel=False),
+        ),
+        arrays=(
+            ArrayRef("fi", (("i",), ("h", "p"), ("w", "q"))),
+            ArrayRef("wgt", (("o",), ("i",), ("p",), ("q",))),
+            ArrayRef("fo", (("o",), ("h",), ("w",)), is_output=True),
+        ),
+        # p/q are excluded: subscripts h+p / w+q make them non-uniform space
+        # candidates; the paper's Table 2 lists exactly {o,h,w,i}.
+        spatial_candidates=("o", "h", "w", "i"),
+        simd_loop="i",
+        dtype=dtype,
+    )
+
+
+# The paper's validation workloads (Table 5) and case studies.
+def mm_validation() -> Workload:
+    return matmul(64, 64, 64)
+
+
+def mm_1024() -> Workload:
+    return matmul(1024, 1024, 1024)
+
+
+def cnn_validation() -> Workload:
+    return conv2d(i=16, o=16, h=16, w=16, p=3, q=3)
+
+
+# VGG16 CONV layers [arXiv:1409.1556]; (I, O, H, W, P, Q), stride 1.
+VGG16_LAYERS: Sequence[Tuple[int, int, int, int, int, int]] = (
+    (3, 64, 224, 224, 3, 3),
+    (64, 64, 224, 224, 3, 3),
+    (64, 128, 112, 112, 3, 3),
+    (128, 128, 112, 112, 3, 3),
+    (128, 256, 56, 56, 3, 3),
+    (256, 256, 56, 56, 3, 3),
+    (256, 256, 56, 56, 3, 3),
+    (256, 512, 28, 28, 3, 3),
+    (512, 512, 28, 28, 3, 3),
+    (512, 512, 28, 28, 3, 3),
+    (512, 512, 14, 14, 3, 3),
+    (512, 512, 14, 14, 3, 3),
+    (512, 512, 14, 14, 3, 3),
+)
+
+# ResNet50 3x3 CONV layers (the systolic-mappable stride-1 3x3 cores of each
+# stage) [arXiv:1512.03385]; 1x1 convs are MMs and handled by the MM flow.
+RESNET50_LAYERS: Sequence[Tuple[int, int, int, int, int, int]] = (
+    (64, 64, 56, 56, 3, 3),
+    (64, 64, 56, 56, 3, 3),
+    (64, 64, 56, 56, 3, 3),
+    (128, 128, 28, 28, 3, 3),
+    (128, 128, 28, 28, 3, 3),
+    (128, 128, 28, 28, 3, 3),
+    (128, 128, 28, 28, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (256, 256, 14, 14, 3, 3),
+    (512, 512, 7, 7, 3, 3),
+    (512, 512, 7, 7, 3, 3),
+    (512, 512, 7, 7, 3, 3),
+)
+
+
+def vgg16_convs() -> List[Workload]:
+    return [conv2d(*p) for p in VGG16_LAYERS]
+
+
+def resnet50_convs() -> List[Workload]:
+    return [conv2d(*p) for p in RESNET50_LAYERS]

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, DataConfig, host_shard_iterator
+
+__all__ = ["SyntheticLM", "DataConfig", "host_shard_iterator"]

@@ -1,0 +1,151 @@
+"""Odyssey-on-TPU: the paper's DSE machinery applied to Pallas block shapes.
+
+This is the faithful hardware adaptation (DESIGN.md §2): the genome is the
+Pallas block shape ``(bm, bk, bn)`` plus the grid permutation (k-innermost vs
+k-outermost), the resource constraint is VMEM instead of BRAM/DSP, and the
+latency model keeps the paper's prologue + steady-state max(compute, DMA) +
+epilogue structure with double buffering.  Non-divisor block shapes are
+first-class — edge blocks are padded, and the model charges the padding
+(``ceil`` grid terms), exactly like the paper's zero-padded non-divisor
+tiling.  The evolutionary engine is literally ``repro.core.evolutionary``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import random
+from typing import Optional, Tuple
+
+from repro.core.evolutionary import EvoConfig, Problem, evolve
+from repro.core.hardware import TPU_V5E, HardwareProfile
+
+from .matmul import MatmulConfig
+
+BlockGenome = Tuple[int, int, int, bool]  # (bm, bk, bn, k_innermost)
+
+
+def _up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class TpuMatmulModel:
+    """Analytic latency/VMEM model of the Pallas matmul on one TPU core."""
+
+    M: int
+    N: int
+    K: int
+    dtype_bytes: int = 2
+    hw: HardwareProfile = TPU_V5E
+
+    def grid(self, g: BlockGenome) -> Tuple[int, int, int]:
+        bm, bk, bn, _ = g
+        return (math.ceil(self.M / bm), math.ceil(self.N / bn),
+                math.ceil(self.K / bk))
+
+    def vmem_bytes(self, g: BlockGenome) -> int:
+        bm, bk, bn, _ = g
+        return (2 * (bm * bk + bk * bn) * self.dtype_bytes
+                + bm * bn * 4 + bm * bn * self.dtype_bytes)
+
+    def block_compute_s(self, g: BlockGenome) -> float:
+        bm, bk, bn, _ = g
+        # MXU granularity: sublane 8 on M, lane 128 on K/N
+        flops = 2 * _up(bm, 8) * _up(bk, 128) * _up(bn, 128)
+        return flops / self.hw.flops_peak
+
+    def block_dma_s(self, g: BlockGenome) -> float:
+        bm, bk, bn, k_inner = g
+        gm, gn, gk = self.grid(g)
+        bytes_in = (bm * bk + bk * bn) * self.dtype_bytes
+        if k_inner:
+            # C written once per (m, n) block; amortize over the k sweep
+            bytes_out = bm * bn * self.dtype_bytes / gk
+        else:
+            # dominated ordering: partial C spilled+reloaded per step (f32)
+            bytes_out = 2 * bm * bn * 4
+        t = (bytes_in + bytes_out) / self.hw.hbm_bw
+        return t + self.hw.dma_overhead_cycles / self.hw.freq_hz
+
+    def latency_s(self, g: BlockGenome) -> float:
+        gm, gn, gk = self.grid(g)
+        n_blocks = gm * gn * gk
+        tc, td = self.block_compute_s(g), self.block_dma_s(g)
+        prologue = td
+        epilogue = (g[0] * g[2] * self.dtype_bytes) / self.hw.hbm_bw
+        return prologue + tc + (n_blocks - 1) * max(tc, td) + epilogue
+
+    def fitness(self, g: BlockGenome) -> float:
+        lat = self.latency_s(g)
+        v = self.vmem_bytes(g)
+        if v > self.hw.vmem_bytes:
+            lat *= (v / self.hw.vmem_bytes) ** 4
+        return -lat
+
+    def mfu(self, g: BlockGenome) -> float:
+        useful = 2 * self.M * self.N * self.K
+        return useful / self.hw.flops_peak / self.latency_s(g)
+
+
+class TpuMatmulProblem(Problem):
+    """core.evolutionary.Problem over Pallas block genomes."""
+
+    def __init__(self, model: TpuMatmulModel):
+        self.model = model
+        self.dims = (model.M, model.K, model.N)
+
+    def sample(self, rng: random.Random) -> BlockGenome:
+        vals = []
+        for d in self.dims:
+            vals.append(rng.randint(1, min(d, 2048)))
+        return (vals[0], vals[1], vals[2], rng.random() < 0.9)
+
+    def mutate(self, g: BlockGenome, rng: random.Random,
+               alpha: float) -> BlockGenome:
+        bm, bk, bn, k_inner = g
+        vals = [bm, bk, bn]
+        i = rng.randrange(3)
+        if rng.random() < alpha:
+            # factorization-style: halve/double
+            vals[i] = max(1, vals[i] // 2) if rng.random() < 0.5 \
+                else min(self.dims[i], vals[i] * 2)
+        else:
+            # random (non-divisor) mutation
+            vals[i] = rng.randint(1, min(self.dims[i], 2048))
+        if rng.random() < 0.05:
+            k_inner = not k_inner
+        return (vals[0], vals[1], vals[2], k_inner)
+
+    def crossover(self, a: BlockGenome, b: BlockGenome,
+                  rng: random.Random) -> BlockGenome:
+        pick = lambda i: (a if rng.random() < 0.5 else b)[i]
+        return (pick(0), pick(1), pick(2), pick(3))
+
+    def fitness(self, g: BlockGenome) -> float:
+        return self.model.fitness(g)
+
+    def key(self, g: BlockGenome):
+        return g
+
+
+@functools.lru_cache(maxsize=4096)
+def tune_matmul(M: int, N: int, K: int, dtype_bytes: int = 2,
+                evals: int = 2000, seed: int = 0) -> MatmulConfig:
+    """Search the block-shape space for (M, N, K); returns a MatmulConfig."""
+    model = TpuMatmulModel(M=M, N=N, K=K, dtype_bytes=dtype_bytes)
+    problem = TpuMatmulProblem(model)
+    cfg = EvoConfig(population=48, parents=12, epochs=60, seed=seed,
+                    max_evals=evals)
+    seeds = [(min(M, 256), min(K, 512), min(N, 256), True),
+             (min(M, 128), min(K, 128), min(N, 128), True)]
+    res = evolve(problem, cfg, seeds=seeds)
+    bm, bk, bn, k_inner = res.best
+    return MatmulConfig(bm=bm, bk=bk, bn=bn, k_innermost=k_inner)
+
+
+def predicted_mfu(M: int, N: int, K: int, cfg: MatmulConfig,
+                  dtype_bytes: int = 2) -> float:
+    model = TpuMatmulModel(M=M, N=N, K=K, dtype_bytes=dtype_bytes)
+    return model.mfu((cfg.bm, cfg.bk, cfg.bn, cfg.k_innermost))

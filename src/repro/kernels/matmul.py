@@ -1,0 +1,141 @@
+"""Tunable Pallas TPU matmul — the "systolic array instance".
+
+This kernel is the TPU realization of one Odyssey design point (DESIGN.md §2):
+
+  * the BlockSpec block shape ``(bm, bk, bn)`` is the array-partitioning tile
+    ``(T_I1, T_K1, T_J1)`` — **non-divisor** shapes are first-class: edge
+    blocks are masked on the contraction dim (out-of-bounds regions of a
+    Pallas block are undefined, so both operands are zeroed past ``K``) and
+    out-of-bounds output rows/cols are dropped on store, which is exactly the
+    paper's zero-padding semantics;
+  * the grid iteration order is the array-partitioning **loop permutation**:
+    ``k`` innermost (``<[i,j],k>``) accumulates in a VMEM scratch and writes
+    each output block once, while ``k`` outermost (``<[k],[i,j]>``-style)
+    revisits output blocks and forces HBM round-trips of partial results —
+    the Theorem 3.1 "dominated ordering", implemented so the benchmark can
+    measure its cost on TPU as the paper did on FPGA;
+  * the MXU plays the role of the fixed 128x128 PE array; alignment of
+    ``bm/bn`` to (8,128) is the latency-hiding/SIMD analog and is scored by
+    the autotuner's performance model rather than hard-coded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulConfig:
+    bm: int = 128
+    bk: int = 128
+    bn: int = 128
+    k_innermost: bool = True    # loop-permutation choice (Theorem 3.1)
+    interpret: bool = False     # CPU validation mode
+
+    def vmem_bytes(self, dtype_bytes: int = 4) -> int:
+        # double-buffered A/B blocks + f32 accumulator + output block
+        return (2 * (self.bm * self.bk + self.bk * self.bn) * dtype_bytes
+                + self.bm * self.bn * 4
+                + self.bm * self.bn * dtype_bytes)
+
+
+def _mask_k(a, b, k_idx, bk, K):
+    """Zero both operands past the true contraction bound (edge blocks)."""
+    kk = k_idx * bk
+    ka = kk + jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    kb = kk + jax.lax.broadcasted_iota(jnp.int32, b.shape, 0)
+    return (jnp.where(ka < K, a, jnp.zeros_like(a)),
+            jnp.where(kb < K, b, jnp.zeros_like(b)))
+
+
+def _kernel_k_inner(a_ref, b_ref, o_ref, acc_ref, *, bk: int, K: int,
+                    mask: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a, b = a_ref[...], b_ref[...]
+    if mask:
+        a, b = _mask_k(a, b, k, bk, K)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_k_outer(a_ref, b_ref, o_ref, *, bk: int, K: int, mask: bool):
+    """Dominated ordering: k is the outermost grid dim, so each output block
+    is revisited across k steps with every other block in between — Pallas
+    must spill/reload the partial block to HBM, exactly the extra C(in)
+    traffic of the paper's Fig. 3 second design."""
+    k = pl.program_id(0)
+    a, b = a_ref[...], b_ref[...]
+    if mask:
+        a, b = _mask_k(a, b, k, bk, K)
+    part = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _first():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array,
+           config: Optional[MatmulConfig] = None,
+           out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    """``a @ b`` via the tunable Pallas kernel.  Any (M, K) x (K, N)."""
+    config = config or MatmulConfig()
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    out_dtype = out_dtype or a.dtype
+    bm, bk, bn = (min(config.bm, M), min(config.bk, K), min(config.bn, N))
+    gm, gn, gk = pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk)
+    mask = (K % bk) != 0
+
+    if config.k_innermost:
+        kern = functools.partial(_kernel_k_inner, bk=bk, K=K, mask=mask)
+        grid = (gm, gn, gk)
+        in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                    pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))]
+        out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+        scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+        dims = ("parallel", "parallel", "arbitrary")
+    else:
+        kern = functools.partial(_kernel_k_outer, bk=bk, K=K, mask=mask)
+        grid = (gk, gm, gn)
+        in_specs = [pl.BlockSpec((bm, bk), lambda k, i, j: (i, k)),
+                    pl.BlockSpec((bk, bn), lambda k, i, j: (k, j))]
+        out_spec = pl.BlockSpec((bm, bn), lambda k, i, j: (i, j))
+        scratch = []
+        dims = ("arbitrary", "parallel", "parallel")
+
+    try:
+        params = dict(compiler_params=pltpu.CompilerParams(
+            dimension_semantics=dims))
+    except Exception:  # older/newer pallas param spellings
+        params = {}
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=scratch,
+        interpret=config.interpret,
+        **params,
+    )(a, b)

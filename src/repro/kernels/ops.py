@@ -1,0 +1,90 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute through ``interpret=True`` (the
+Pallas interpreter runs the kernel body per grid step); on TPU the same code
+lowers through Mosaic.  ``set_interpret_default`` flips the global default so
+tests/examples run identically in both environments.
+
+``conv2d`` lowers convolution to im2col + the tunable matmul kernel — on TPU
+the MXU *is* the systolic array, so conv shares the tuned MM design exactly
+as AutoSA maps both workloads onto the same array generator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import FlashConfig, flash_attention
+from .matmul import MatmulConfig, matmul
+from .ssd import SSDConfig, ssd_chunk
+
+_INTERPRET_DEFAULT = jax.default_backend() != "tpu"
+
+
+def set_interpret_default(value: bool) -> None:
+    global _INTERPRET_DEFAULT
+    _INTERPRET_DEFAULT = value
+
+
+def interpret_default() -> bool:
+    return _INTERPRET_DEFAULT
+
+
+def _mm_cfg(config: Optional[MatmulConfig]) -> MatmulConfig:
+    cfg = config or MatmulConfig()
+    if cfg.interpret != _INTERPRET_DEFAULT and config is None:
+        cfg = MatmulConfig(interpret=_INTERPRET_DEFAULT)
+    return cfg
+
+
+@functools.partial(jax.jit, static_argnames=("config", "out_dtype"))
+def matmul_op(a: jax.Array, b: jax.Array,
+              config: Optional[MatmulConfig] = None,
+              out_dtype=None) -> jax.Array:
+    return matmul(a, b, _mm_cfg(config), out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "config"))
+def attention_op(q: jax.Array, k: jax.Array, v: jax.Array,
+                 causal: bool = False, scale: Optional[float] = None,
+                 config: Optional[FlashConfig] = None) -> jax.Array:
+    cfg = config or FlashConfig(interpret=_INTERPRET_DEFAULT)
+    return flash_attention(q, k, v, causal=causal, scale=scale, config=cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def conv2d_op(x: jax.Array, w: jax.Array,
+              config: Optional[MatmulConfig] = None) -> jax.Array:
+    """VALID conv via im2col + the tunable Pallas matmul.
+
+    x: (N, H, W, Ci); w: (P, Q, Ci, Co) -> (N, H-P+1, W-Q+1, Co).
+    """
+    N, H, W, Ci = x.shape
+    P, Q, _, Co = w.shape
+    Ho, Wo = H - P + 1, W - Q + 1
+    # im2col: gather P*Q shifted views -> (N*Ho*Wo, P*Q*Ci)
+    cols = []
+    for p in range(P):
+        for q in range(Q):
+            cols.append(jax.lax.dynamic_slice(
+                x, (0, p, q, 0), (N, Ho, Wo, Ci)))
+    patches = jnp.stack(cols, axis=3).reshape(N * Ho * Wo, P * Q * Ci)
+    wmat = w.reshape(P * Q * Ci, Co)
+    out = matmul(patches, wmat, _mm_cfg(config))
+    return out.reshape(N, Ho, Wo, Co)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def ssd_chunk_op(x, a, b, c, h0=None, config: Optional[SSDConfig] = None):
+    cfg = config or SSDConfig(interpret=_INTERPRET_DEFAULT)
+    return ssd_chunk(x, a, b, c, h0=h0, config=cfg)
+
+
+__all__ = ["matmul_op", "attention_op", "conv2d_op", "ssd_chunk_op",
+           "MatmulConfig", "FlashConfig", "SSDConfig", "ref",
+           "set_interpret_default", "interpret_default"]

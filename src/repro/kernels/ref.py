@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array,
+           out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = False, scale: Optional[float] = None,
+              ) -> jax.Array:
+    """Oracle MHA.  q: (B,H,S,D); k/v: (B,Hkv,T,D); GQA by head grouping."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if causal:
+        # q position i attends kv position j when j <= i + (T - S)
+        mask = (jnp.arange(T)[None, :] <= jnp.arange(S)[:, None] + (T - S))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def conv2d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle VALID conv.  x: (N,H,W,Ci); w: (P,Q,Ci,Co)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def ssd_chunk(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+              h0: Optional[jax.Array] = None):
+    """Oracle for one SSD (state-space duality) chunk [arXiv:2405.21060].
+
+    Sequential recurrence over the chunk:
+        h_t = exp(a_t) * h_{t-1} + b_t^T x_t        (outer product update)
+        y_t = c_t @ h_t
+    x: (L, H, P)   per-step inputs (H heads, P head dim)
+    a: (L, H)      log-decays
+    b: (L, H, N)   input projections (N = state dim)
+    c: (L, H, N)   output projections
+    h0: (H, N, P)  incoming state
+    Returns (y: (L, H, P), h_final: (H, N, P)).
+    """
+    L, H, P = x.shape
+    N = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = jnp.exp(at)[:, None, None] * h + \
+            bt[:, :, None] * xt[:, None, :]
+        yt = jnp.einsum("hn,hnp->hp", ct, h)
+        return h, yt
+
+    hT, y = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (x.astype(jnp.float32), a.astype(jnp.float32),
+                          b.astype(jnp.float32), c.astype(jnp.float32)))
+    return y.astype(x.dtype), hT

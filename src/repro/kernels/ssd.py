@@ -1,0 +1,106 @@
+"""Mamba2 SSD (state-space duality) chunk kernel [arXiv:2405.21060].
+
+The SSD insight: a chunk of the selective-state-space recurrence
+
+    h_t = exp(a_t) h_{t-1} + b_t^T x_t ,    y_t = c_t h_t
+
+expands into a *matmul-shaped* computation — exactly the systolic-array
+workload class Odyssey tunes.  Per chunk of length L (per head):
+
+    Y = (G o D) X + exp(acum) * (C h0)        G = C B^T   (L x L)
+    D[i, j] = exp(acum_i - acum_j) * [j <= i]             (decay mask)
+    hT = B'^T X + exp(a_total) h0             B'_j = exp(a_total - acum_j) B_j
+
+The kernel computes one chunk per head per grid step with everything resident
+in VMEM; the inter-chunk recurrence (a scan over chunk states) stays at the
+JAX level in the model.  The time-tiling (chunk length) is the SSD analog of
+the ``T_K1`` reduction tile and is searched by the Odyssey autotuner.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    interpret: bool = False
+
+
+def _kernel(x_ref, acum_ref, b_ref, c_ref, h0_ref, y_ref, ht_ref):
+    x = x_ref[0].astype(jnp.float32)         # (L, P)
+    acum = acum_ref[0].astype(jnp.float32)   # (1, L) row vector
+    b = b_ref[0].astype(jnp.float32)         # (L, N)
+    c = c_ref[0].astype(jnp.float32)         # (L, N)
+    h0 = h0_ref[0].astype(jnp.float32)       # (N, P)
+
+    L = x.shape[0]
+    ai = acum.reshape(L, 1)                  # acum_i
+    aj = acum.reshape(1, L)                  # acum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(ai - aj), 0.0)
+
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    y_intra = jnp.dot(g * decay, x, preferred_element_type=jnp.float32)
+    y_inter = jnp.exp(ai) * jnp.dot(c, h0,
+                                    preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    a_total = acum[0, L - 1]
+    b_scaled = b * jnp.exp(a_total - aj.reshape(L, 1))
+    ht = jax.lax.dot_general(b_scaled, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    ht_ref[0] = ht + jnp.exp(a_total) * h0
+
+
+def ssd_chunk(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+              h0: Optional[jax.Array] = None,
+              config: Optional[SSDConfig] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One SSD chunk for all heads.
+
+    x: (L, H, P), a: (L, H) log-decays, b/c: (L, H, N), h0: (H, N, P).
+    Returns (y: (L, H, P), hT: (H, N, P)).
+    """
+    config = config or SSDConfig()
+    L, H, P = x.shape
+    N = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+    acum = jnp.cumsum(a.astype(jnp.float32), axis=0)     # (L, H)
+
+    xh = jnp.transpose(x, (1, 0, 2))                     # (H, L, P)
+    ah = jnp.transpose(acum, (1, 0))[:, None, :]         # (H, 1, L)
+    bh = jnp.transpose(b, (1, 0, 2))                     # (H, L, N)
+    ch = jnp.transpose(c, (1, 0, 2))                     # (H, L, N)
+
+    y, ht = pl.pallas_call(
+        _kernel,
+        grid=(H,),
+        in_specs=[
+            pl.BlockSpec((1, L, P), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, 1, L), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda h: (h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, P), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda h: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, L, P), x.dtype),
+            jax.ShapeDtypeStruct((H, N, P), jnp.float32),
+        ],
+        interpret=config.interpret,
+    )(xh, ah, bh, ch, h0)
+    return jnp.transpose(y, (1, 0, 2)), ht

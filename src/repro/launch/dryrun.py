@@ -1,0 +1,258 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+MUST set the placeholder device count before any other import — jax locks
+the device count on first init."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, ARCH_IDS, all_cells, input_specs  # noqa: E402
+from repro.launch import hlo_costs                  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import SHAPES, build_model        # noqa: E402
+from repro.parallel import plan as plan_lib         # noqa: E402
+from repro.parallel.sharding import axis_rules, default_rules  # noqa: E402
+from repro.serve.engine import build_decode_step, build_prefill_step  # noqa: E402
+from repro.train.optimizer import AdamWConfig       # noqa: E402
+from repro.train.step import abstract_train_state, build_train_step  # noqa: E402
+
+# TPU v5e constants (assignment-provided)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2}
+
+_COLL_RE = re.compile(
+    r"=\s+(\S+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+_SHAPE_RE = re.compile(r"^([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(s: str) -> int:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device wire bytes by op family.
+
+    Convention (ring algorithms, per-device traffic): all-reduce moves 2x
+    its shard; all-gather/all-to-all/collective-permute move their result
+    size; reduce-scatter moves its input (= result x world, already the
+    per-device HLO operand)."""
+    totals = {}
+    counts = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_shape, op = m.groups()
+        nbytes = _shape_bytes(result_shape)
+        if op == "all-reduce":
+            nbytes *= 2
+        elif op == "reduce-scatter":
+            ops = re.findall(r"\(([a-z0-9]+\[[0-9,]*\])", line)
+            if ops:
+                nbytes = _shape_bytes(ops[0])
+        totals[op] = totals.get(op, 0) + nbytes
+        counts[op] = counts.get(op, 0) + 1
+    return sum(totals.values()), totals, counts
+
+
+def build_cell(arch: str, shape_name: str, rules):
+    """Returns (fn, args, in_shardings, out_shardings, donate)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = AdamWConfig(state_dtype=cfg.optimizer_state_dtype)
+        # microbatch rows must stay divisible by the batch-shard count or
+        # XLA replicates the whole microbatch across pods (measured 9x
+        # redundant FLOPs on the 2-pod mesh before this clamp)
+        bshards = max(1, rules.axis_size("batch"))
+        mb = cfg.train_microbatches
+        while mb > 1 and (shape.global_batch // mb) % bshards:
+            mb //= 2
+        step = build_train_step(model, opt, microbatches=mb)
+        state_abs = abstract_train_state(model, opt)
+        st_spec = plan_lib.train_state_specs(state_abs, rules)
+        b_spec = plan_lib.batch_input_specs(specs, rules)
+        in_sh = (plan_lib.to_named(st_spec, rules),
+                 plan_lib.to_named(b_spec, rules))
+        out_sh = (plan_lib.to_named(st_spec, rules), None)
+        return step, (state_abs, specs), in_sh, out_sh, (0,)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    p_spec = plan_lib.param_specs(params_abs, rules)
+    p_named = plan_lib.to_named(p_spec, rules)
+
+    if shape.kind == "prefill":
+        step = build_prefill_step(model)
+        b_spec = plan_lib.batch_input_specs(specs, rules)
+        in_sh = (p_named, plan_lib.to_named(b_spec, rules))
+        # pin the produced KV/state cache to the serving layout (compiler
+        # default replicates it)
+        out_abs = jax.eval_shape(step, params_abs, specs)
+        c_spec = plan_lib.cache_specs(out_abs[1], rules)
+        out_sh = (None, plan_lib.to_named(c_spec, rules))
+        return step, (params_abs, specs), in_sh, out_sh, ()
+
+    # decode
+    step = build_decode_step(model)
+    cache_abs = specs["cache"]
+    c_spec = plan_lib.cache_specs(cache_abs, rules)
+    c_named = plan_lib.to_named(c_spec, rules)
+    tok_spec = plan_lib.to_named(
+        plan_lib.batch_input_specs(
+            {"tokens": specs["tokens"], "pos": specs["pos"]}, rules), rules)
+    in_sh = (p_named, c_named, tok_spec["tokens"], tok_spec["pos"])
+    out_sh = (None, c_named)
+    args = (params_abs, cache_abs, specs["tokens"], specs["pos"])
+    return step, args, in_sh, out_sh, (1,)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.family == "encdec":
+            tokens = shape.global_batch * (shape.seq_len
+                                           + shape.seq_len // 8)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rules = default_rules(mesh)
+    tag = f"{arch}__{shape_name}__{'pod2x16x16' if multi_pod else 'pod16x16'}"
+    t0 = time.time()
+    with mesh:
+        with axis_rules(rules):
+            fn, args, in_sh, out_sh, donate = build_cell(
+                arch, shape_name, rules)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware costs (XLA's cost_analysis counts scan bodies once)
+    summary = hlo_costs.analyze(hlo)
+    flops_dev = summary.flops
+    bytes_dev = summary.bytes
+    coll_total = summary.collective_bytes
+    coll_by_op = summary.collective_by_op
+    coll_counts = summary.collective_counts
+    mf = model_flops(arch, shape_name)
+
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    coll_term = coll_total / ICI_BW
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": coll_term}
+    bottleneck = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "xla_cost_analysis_flops_unscaled": float(
+            xla_cost.get("flops", 0.0)),
+        "collective_bytes_per_dev": coll_total,
+        "collective_by_op": coll_by_op,
+        "collective_counts": coll_counts,
+        **{k: v for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / flops_dev if flops_dev else 0,
+        "roofline_fraction": max(
+            (mf / n_chips) / PEAK_FLOPS / max(terms.values()), 0.0)
+        if max(terms.values()) > 0 else 0.0,
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+                / 2**30, 3),
+        },
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"[ok] {tag}: compile {t_compile:.1f}s "
+          f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+          f"coll/dev={coll_total:.3e} bottleneck={rec['bottleneck']} "
+          f"peak~{rec['memory']['peak_estimate_gb']}GB "
+          f"roofline={rec['roofline_fraction']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        if arch is None or shape is None:
+            ap.error("need --arch and --shape, or --all")
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, args.out_dir)
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print("dry-run complete: all cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving launcher: load a checkpoint (or init), batch requests, decode.
+
+``python -m repro.launch.serve --arch smollm-135m --smoke --requests 8``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import latest_checkpoint, restore_checkpoint
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    if args.ckpt_dir:
+        path = latest_checkpoint(args.ckpt_dir)
+        if path:
+            template = jax.eval_shape(
+                lambda: {"params": params})["params"]
+            state_t = jax.eval_shape(lambda: {"params": params,
+                                              "opt_state": {}})
+            # restore params only
+            from repro.ckpt.checkpoint import _flatten  # noqa
+            import numpy as _np
+            with _np.load(path + "/state.npz") as z:
+                arrays = {k.split("params::", 1)[1]: z[k]
+                          for k in z.files if k.startswith("params::")}
+            flat, tdef = jax.tree_util.tree_flatten_with_path(params)
+            leaves = []
+            for p, leaf in flat:
+                name = "::".join(str(getattr(k, "key", k)) for k in p)
+                leaves.append(arrays[name].astype(leaf.dtype))
+            params = jax.tree_util.tree_unflatten(tdef, leaves)
+            print(f"[serve] restored {path}")
+
+    eng = ServingEngine(model, params, ServeConfig(max_batch=args.max_batch))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(2, 8))
+               .astype(np.int32) for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    outs = eng.generate(prompts, max_new_tokens=args.max_new_tokens)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    print(f"served {len(prompts)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    for i, o in enumerate(outs[:4]):
+        print(f"  req{i}: prompt={prompts[i].tolist()} -> {o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, shapes_for
+from .api import Model, build_model, cross_entropy
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shapes_for",
+           "Model", "build_model", "cross_entropy"]

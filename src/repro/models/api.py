@@ -1,0 +1,63 @@
+"""Uniform model API: build_model(cfg) dispatches on family.
+
+Every model exposes:
+    init(key)                          -> params
+    forward(params, batch)             -> (logits, cache|None)
+    loss(params, batch)                -> scalar f32
+    init_cache(B, T)                   -> cache pytree
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer, mamba, encdec
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; stable with vocab-sharded logits."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable                  # (params, batch, want_cache=False)
+    init_cache: Callable               # (B, T)
+    decode_step: Callable              # (params, cache, tokens, pos)
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch)
+        return cross_entropy(logits, batch["labels"])
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family in ("ssm", "hybrid"):
+        mod = mamba
+    elif cfg.family == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(cfg.family)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_params(cfg, key),
+        forward=lambda params, batch, want_cache=False:
+            mod.forward(cfg, params, batch, want_cache=want_cache),
+        init_cache=lambda B, T, **kw: mod.init_cache(cfg, B, T, **kw),
+        decode_step=lambda params, cache, tokens, pos:
+            mod.decode_step(cfg, params, cache, tokens, pos),
+    )

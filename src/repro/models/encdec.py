@@ -1,0 +1,195 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv/audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings ``(B, S_enc, d_model)`` directly to the encoder
+(the frontend's strided convs are not part of the systolic mapping study).
+Positional information is sinusoidal, computed on the fly (no max-length
+tables, so any dry-run shape lowers)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+from .config import ModelConfig
+from . import layers as L
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sinusoid(S: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = _dtype(cfg)
+    kE, kEnc, kDec = jax.random.split(key, 3)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "attn": L.attn_init(k1, cfg, dtype),
+                "mlp": L.mlp_init(k2, cfg, dtype=dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((cfg.d_model,), dtype),
+                "ln2": jnp.ones((cfg.d_model,), dtype),
+                "ln3": jnp.ones((cfg.d_model,), dtype),
+                "self_attn": L.attn_init(k1, cfg, dtype),
+                "cross_attn": L.attn_init(k2, cfg, dtype),
+                "mlp": L.mlp_init(k3, cfg, dtype=dtype)}
+
+    return {
+        "embed": L.embed_init(kE, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(enc_layer)(
+            jax.random.split(kEnc, cfg.encoder_layers)),
+        "dec_layers": jax.vmap(dec_layer)(
+            jax.random.split(kDec, cfg.num_layers)),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder output."""
+    B, S, d = frames.shape
+    x = frames.astype(_dtype(cfg)) + _sinusoid(S, d, _dtype(cfg))[None]
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    def body(x, lp):
+        h = L.attn_forward(lp["attn"], cfg, L.rmsnorm(x, lp["ln1"]),
+                           positions, causal=False)
+        x = x + h
+        x = x + L.mlp_forward(lp["mlp"], cfg, L.rmsnorm(x, lp["ln2"]))
+        return x, None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_norm"])
+
+
+def cross_kv(cfg: ModelConfig, params, enc_out: jax.Array):
+    """Precompute per-decoder-layer cross K/V: (Ldec, B, S_enc, Hkv, hd)."""
+    B, S, _ = enc_out.shape
+
+    def body(_, lp):
+        p = lp["cross_attn"]
+        k = (enc_out @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
+        v = (enc_out @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.hd)
+        if cfg.qk_norm:
+            k = L.rmsnorm(k, p["k_norm"])
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
+    return ks, vs
+
+
+def decode_train(cfg: ModelConfig, params, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    """Teacher-forced decoder over full token sequence -> logits."""
+    B, S = tokens.shape
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        + _sinusoid(S, cfg.d_model, dtype)[None]
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+    enc_B, enc_S, _ = enc_out.shape
+
+    def body(x, lp):
+        h = L.attn_forward(lp["self_attn"], cfg, L.rmsnorm(x, lp["ln1"]),
+                           positions, causal=True)
+        x = x + h
+        p = lp["cross_attn"]
+        k = (enc_out @ p["wk"]).reshape(enc_B, enc_S, cfg.num_kv_heads,
+                                        cfg.hd)
+        v = (enc_out @ p["wv"]).reshape(enc_B, enc_S, cfg.num_kv_heads,
+                                        cfg.hd)
+        h = L.attn_forward(p, cfg, L.rmsnorm(x, lp["ln2"]), positions,
+                           causal=False, kv=(k, v))
+        x = x + h
+        x = x + L.mlp_forward(lp["mlp"], cfg, L.rmsnorm(x, lp["ln3"]))
+        return x, None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"]
+                      ).astype(jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, batch, want_cache: bool = False):
+    enc_out = encode(cfg, params, batch["enc_frames"])
+    logits = decode_train(cfg, params, batch["tokens"], enc_out)
+    cache = None
+    if want_cache:
+        ks, vs = cross_kv(cfg, params, enc_out)
+        B, S = batch["tokens"].shape
+        cache = init_cache(cfg, B, S, dtype=_dtype(cfg))
+        cache["cross_k"], cache["cross_v"] = ks, vs
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int, dtype=jnp.bfloat16,
+               enc_len: int = 0):
+    enc_len = enc_len or max(1, T // 8)
+    Ld = cfg.num_layers
+    return {
+        "k": jnp.zeros((Ld, B, T, cfg.num_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((Ld, B, T, cfg.num_kv_heads, cfg.hd), dtype),
+        "cross_k": jnp.zeros((Ld, B, enc_len, cfg.num_kv_heads, cfg.hd),
+                             dtype),
+        "cross_v": jnp.zeros((Ld, B, enc_len, cfg.num_kv_heads, cfg.hd),
+                             dtype),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decoder token against self-KV cache + fixed cross-KV."""
+    B = tokens.shape[0]
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    # sinusoidal positional term at pos (per row)
+    d = cfg.d_model
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos.astype(jnp.float32)[:, None] / jnp.power(10000.0, dim / d)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+    x = x + pe[:, None, :]
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h, ck, cv = L.attn_decode(lp["self_attn"], cfg,
+                                  L.rmsnorm(x, lp["ln1"]), ck, cv, pos)
+        x = x + h
+        p = lp["cross_attn"]
+        q = (L.rmsnorm(x, lp["ln2"]) @ p["wq"]).reshape(
+            B, 1, cfg.num_heads, cfg.hd)
+        out = L.full_attention(q, xk, xv, causal=False)
+        x = x + out.reshape(B, 1, -1) @ p["wo"]
+        x = x + L.mlp_forward(lp["mlp"], cfg, L.rmsnorm(x, lp["ln3"]))
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]
+                        ).astype(jnp.float32)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = nk, nv
+    return logits, new_cache

@@ -1,0 +1,197 @@
+"""Mamba2 (SSD) language model and the Zamba2-style hybrid.
+
+mamba2-130m: a pure stack of SSD blocks (attention-free, tied embeddings).
+zamba2-2.7b: SSD backbone with one *shared* transformer block (single weight
+set) invoked every ``hybrid_attn_period`` SSM layers — the Zamba2 pattern of
+[arXiv:2411.15242], simplified to a plain shared block (no LoRA adapters,
+noted in DESIGN.md).  Both are sub-quadratic in sequence length, so they run
+the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+from .config import ModelConfig
+from . import layers as L
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _mamba_layer_init(key, cfg: ModelConfig, dtype):
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "mixer": L.mamba_init(key, cfg, dtype)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = _dtype(cfg)
+    kE, kL, kS = jax.random.split(key, 3)
+    lkeys = jax.random.split(kL, cfg.num_layers)
+    period = cfg.hybrid_attn_period
+
+    if period:
+        n_groups = cfg.num_layers // period
+
+        def ginit(gkey):
+            ks = jax.random.split(gkey, period)
+            return {f"l{i}": _mamba_layer_init(ks[i], cfg, dtype)
+                    for i in range(period)}
+
+        stacked = jax.vmap(ginit)(jax.random.split(kL, n_groups))
+        k1, k2 = jax.random.split(kS)
+        shared = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                  "ln2": jnp.ones((cfg.d_model,), dtype),
+                  "attn": L.attn_init(k1, cfg, dtype),
+                  "mlp": L.mlp_init(k2, cfg, dtype=dtype)}
+        params = {"layers": stacked, "shared_attn": shared}
+    else:
+        stacked = jax.vmap(lambda k: _mamba_layer_init(k, cfg, dtype)
+                           )(lkeys)
+        params = {"layers": stacked}
+
+    params["embed"] = L.embed_init(kE, cfg.vocab_size, cfg.d_model, dtype)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+def _empty_state(cfg: ModelConfig, B: int):
+    return {
+        "ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), _dtype(cfg)),
+    }
+
+
+def _logits(cfg, params, x):
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"]
+                      ).astype(jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, batch, want_cache: bool = False):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    B, S, _ = x.shape
+    x = shard(x, "batch", None, "model")  # d-sharded residual: SSD needs the full sequence, so the remat carry shrinks on d_model instead
+    period = cfg.hybrid_attn_period
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (B, S))
+
+    def mamba_block(lp, x):
+        h, st = L.mamba_forward(lp["mixer"], cfg, L.rmsnorm(x, lp["ln"]))
+        return x + h, st
+
+    if period:
+        shared = params["shared_attn"]
+
+        def group_body(x, gp):
+            states = []
+            for i in range(period):
+                x, st = mamba_block(gp[f"l{i}"], x)
+                states.append(st)
+            h, kv = L.attn_forward(shared["attn"], cfg,
+                                   L.rmsnorm(x, shared["ln1"]), positions,
+                                   causal=True, return_kv=True)
+            x = x + h
+            x = x + L.mlp_forward(shared["mlp"], cfg,
+                                  L.rmsnorm(x, shared["ln2"]))
+            ys = {"ssm": jnp.stack([s["ssm"] for s in states]),
+                  "conv": jnp.stack([s["conv"] for s in states]),
+                  "kv": kv}
+            return x, ys
+
+        scan_fn = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, ys = jax.lax.scan(scan_fn, x, params["layers"])
+        cache = None
+        if want_cache:
+            G, P_ = ys["ssm"].shape[0], ys["ssm"].shape[1]
+            cache = {
+                "ssm": ys["ssm"].reshape((G * P_,) + ys["ssm"].shape[2:]),
+                "conv": ys["conv"].reshape((G * P_,) + ys["conv"].shape[2:]),
+                "k": ys["kv"][0], "v": ys["kv"][1],   # (G, B, S, Hkv, hd)
+            }
+    else:
+        def body(x, lp):
+            x, st = mamba_block(lp, x)
+            return x, st
+
+        scan_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, sts = jax.lax.scan(scan_fn, x, params["layers"])
+        cache = {"ssm": sts["ssm"], "conv": sts["conv"]} if want_cache \
+            else None
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return _logits(cfg, params, x), cache
+
+
+def init_cache(cfg: ModelConfig, B: int, T: int, dtype=jnp.bfloat16):
+    cache = {
+        "ssm": jnp.zeros((cfg.num_layers, B, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, B, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+    if cfg.hybrid_attn_period:
+        G = cfg.num_layers // cfg.hybrid_attn_period
+        cache["k"] = jnp.zeros((G, B, T, cfg.num_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((G, B, T, cfg.num_kv_heads, cfg.hd), dtype)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = jnp.take(params["embed"], tokens, axis=0)        # (B, 1, d)
+    period = cfg.hybrid_attn_period
+
+    def mamba_step(lp, x, st):
+        h, st = L.mamba_forward(lp["mixer"], cfg, L.rmsnorm(x, lp["ln"]),
+                                state=st, decode=True)
+        return x + h, st
+
+    if period:
+        shared = params["shared_attn"]
+        G = cfg.num_layers // period
+        ssm = cache["ssm"].reshape((G, period) + cache["ssm"].shape[1:])
+        conv = cache["conv"].reshape((G, period) + cache["conv"].shape[1:])
+
+        def group_body(x, inp):
+            gp, ssm_g, conv_g, ck, cv = inp
+            new_ssm, new_conv = [], []
+            for i in range(period):
+                x, st = mamba_step(gp[f"l{i}"], x,
+                                   {"ssm": ssm_g[i], "conv": conv_g[i]})
+                new_ssm.append(st["ssm"])
+                new_conv.append(st["conv"])
+            h, ck, cv = L.attn_decode(shared["attn"], cfg,
+                                      L.rmsnorm(x, shared["ln1"]), ck, cv,
+                                      pos)
+            x = x + h
+            x = x + L.mlp_forward(shared["mlp"], cfg,
+                                  L.rmsnorm(x, shared["ln2"]))
+            return x, (jnp.stack(new_ssm), jnp.stack(new_conv), ck, cv)
+
+        x, (nssm, nconv, nk, nv) = jax.lax.scan(
+            group_body, x, (params["layers"], ssm, conv,
+                            cache["k"], cache["v"]))
+        cache = {"ssm": nssm.reshape(cache["ssm"].shape),
+                 "conv": nconv.reshape(cache["conv"].shape),
+                 "k": nk, "v": nv}
+    else:
+        def body(x, inp):
+            lp, ssm_l, conv_l = inp
+            x, st = mamba_step(lp, x, {"ssm": ssm_l, "conv": conv_l})
+            return x, (st["ssm"], st["conv"])
+
+        x, (nssm, nconv) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        cache = {"ssm": nssm, "conv": nconv}
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return _logits(cfg, params, x), cache

@@ -1,0 +1,7 @@
+"""Distribution layer: logical-axis sharding rules over (pod, data, model)."""
+
+from .sharding import (axis_rules, shard, current_rules, ShardingRules,
+                       infer_param_spec, param_specs, batch_spec)
+
+__all__ = ["axis_rules", "shard", "current_rules", "ShardingRules",
+           "infer_param_spec", "param_specs", "batch_spec"]

@@ -1,0 +1,89 @@
+"""Sharding plans: NamedSharding pytrees for train/serve step arguments.
+
+Parameters follow `sharding.param_specs` (TP+FSDP); optimizer moments use
+the wider `opt_fsdp_axes` (pod-extended ZeRO); batch inputs shard on the
+batch axes; caches shard greedily (batch dim on the batch axes, the largest
+remaining divisible dim on 'model' — for KV caches that is the time axis,
+giving the flash-decode layout where attention reductions turn into
+collectives)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import ShardingRules, param_specs
+
+
+def _named(rules: ShardingRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)
+
+
+def batch_input_specs(batch_shapes: Dict, rules: ShardingRules):
+    """Spec tree for model input batches (tokens/labels/frames/…)."""
+    baxes = rules.logical.get("batch", ())
+    bsize = rules.axis_size("batch")
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        bdim = 1 if name == "positions" and len(shape) >= 2 else 0
+        spec = [None] * len(shape)
+        if len(shape) > bdim and shape[bdim] % max(1, bsize) == 0 \
+                and bsize > 1:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        return P(*spec)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(batch_shapes)
+    return jax.tree_util.tree_unflatten(
+        tdef, [one(p, l) for p, l in flat])
+
+
+def cache_specs(cache_shapes: Dict, rules: ShardingRules):
+    """Greedy spec for KV/state caches: batch dim -> batch axes; largest
+    remaining divisible dim -> 'model'.  Cache leaves are stacked (L, B, ...)
+    so the batch dim is dim 1."""
+    baxes = rules.logical.get("batch", ())
+    bsize = rules.axis_size("batch")
+    msize = rules.axis_size("model")
+    maxes = rules.physical("model")
+
+    def one(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and bsize > 1 and shape[1] % bsize == 0:
+            spec[1] = baxes if len(baxes) > 1 else baxes[0]
+        if msize > 1:
+            cands = [i for i in range(2, len(shape))
+                     if spec[i] is None and shape[i] % msize == 0]
+            if cands:
+                best = max(cands, key=lambda i: shape[i])
+                spec[best] = maxes
+        return P(*spec)
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def train_state_specs(state_shapes: Dict, rules: ShardingRules):
+    """Spec tree for {params, opt_state{m,v,step}, [ef_residual]}."""
+    p_specs = param_specs(state_shapes["params"], rules)
+    out = {"params": p_specs,
+           "opt_state": {
+               "m": param_specs(state_shapes["opt_state"]["m"], rules,
+                                fsdp_axes=rules.opt_fsdp_axes),
+               "v": param_specs(state_shapes["opt_state"]["v"], rules,
+                                fsdp_axes=rules.opt_fsdp_axes),
+               "step": P(),
+           }}
+    if "ef_residual" in state_shapes:
+        out["ef_residual"] = param_specs(state_shapes["ef_residual"], rules,
+                                         fsdp_axes=rules.opt_fsdp_axes)
+    return out
+
+
+def to_named(spec_tree: Any, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: _named(rules, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

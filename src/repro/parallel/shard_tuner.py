@@ -1,0 +1,106 @@
+"""Distributed-level Odyssey: search step-level mapping knobs with the
+roofline terms from ``.lower().compile()`` artifacts as the fitness.
+
+This is the paper's Lesson 3 ("the methodology is general") applied one
+level up: instead of tiling factors for one systolic array, the genome is
+the *mapping of a whole train step onto the pod* — microbatch count (the
+grad-accumulation time-tile, the distributed analog of ``T_K1``) and the
+optimizer-state FSDP extent.  Fitness = the modeled step time
+``max(compute, memory, collective)`` extracted from the compiled HLO by
+``launch.hlo_costs`` — i.e. the same "accurate model over the compiler's
+real output" philosophy the paper argues for.
+
+Usage (CPU, 512 placeholder devices — run as a module like dryrun):
+
+    python -m repro.parallel.shard_tuner --arch nemotron-4-340b \
+        --microbatches 4,8,16
+"""
+
+import os
+if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, ARCH_IDS, input_specs  # noqa: E402
+from repro.launch import hlo_costs                      # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.models import SHAPES, build_model            # noqa: E402
+from repro.parallel import plan as plan_lib             # noqa: E402
+from repro.parallel.sharding import axis_rules, default_rules  # noqa: E402
+from repro.train.optimizer import AdamWConfig           # noqa: E402
+from repro.train.step import abstract_train_state, \
+    build_train_step                                    # noqa: E402
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def score_variant(arch: str, microbatches: int, multi_pod: bool = False):
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+    shape = SHAPES["train_4k"]
+    opt = AdamWConfig(state_dtype=cfg.optimizer_state_dtype)
+    t0 = time.time()
+    with mesh, axis_rules(rules):
+        step = build_train_step(model, opt, microbatches=microbatches)
+        state_abs = abstract_train_state(model, opt)
+        st = plan_lib.to_named(plan_lib.train_state_specs(state_abs, rules),
+                               rules)
+        specs = input_specs(cfg, shape)
+        b = plan_lib.to_named(plan_lib.batch_input_specs(specs, rules),
+                              rules)
+        compiled = jax.jit(step, in_shardings=(st, b),
+                           out_shardings=(st, None), donate_argnums=(0,)
+                           ).lower(state_abs, specs).compile()
+    s = hlo_costs.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    terms = {"compute_s": s.flops / PEAK, "memory_s": s.bytes / HBM,
+             "collective_s": s.collective_bytes / ICI}
+    return {
+        "arch": arch, "microbatches": microbatches,
+        "step_time_model_s": max(terms.values()), **terms,
+        "peak_gb": round((mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes) / 2 ** 30, 2),
+        "compile_s": round(time.time() - t0, 1),
+    }
+
+
+def tune(arch: str, candidates, multi_pod: bool = False):
+    """Greedy sweep (the candidate set is small enough to be exhaustive —
+    the evolutionary engine takes over when the space grows)."""
+    results = [score_variant(arch, mb, multi_pod) for mb in candidates]
+    best = min(results, key=lambda r: (r["peak_gb"] > 16.0,
+                                       r["step_time_model_s"]))
+    return best, results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="nemotron-4-340b", choices=ARCH_IDS)
+    ap.add_argument("--microbatches", default="4,8,16")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/shard_tuner.json")
+    args = ap.parse_args()
+    cands = [int(x) for x in args.microbatches.split(",")]
+    best, results = tune(args.arch, cands, args.multi_pod)
+    for r in results:
+        print(f"mb={r['microbatches']:3d} step~{r['step_time_model_s']:.1f}s"
+              f" (comp {r['compute_s']:.1f} mem {r['memory_s']:.1f}"
+              f" coll {r['collective_s']:.1f}) peak {r['peak_gb']}GB"
+              f" compile {r['compile_s']}s")
+    print(f"best: microbatches={best['microbatches']}")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"best": best, "results": results}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Logical-axis sharding: one set of model code, any mesh.
+
+Model code annotates activations with *logical* axes (``batch``, ``seq``,
+``model``) via :func:`shard`; a :class:`ShardingRules` context maps them to
+physical mesh axes.  Outside a context the annotations are no-ops, so the
+same model runs single-device smoke tests and the 512-chip dry-run.
+
+Parameter sharding is rule-based (:func:`infer_param_spec`):
+
+  * tensor parallel ('model'): column-parallel for up/gate/QKV projections,
+    row-parallel for down/output projections, vocab-parallel embeddings,
+    expert-parallel (EP) for MoE expert stacks;
+  * FSDP ('data', plus 'pod' for optimizer state in multi-pod meshes): the
+    largest remaining divisible dim is additionally sharded, ZeRO-3 style.
+
+Every rule checks divisibility and silently degrades to replication for that
+dim — required because e.g. 40 query heads do not divide a 16-way model axis
+(that's why attention uses sequence-parallel activations instead; DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    # logical -> physical mesh axis (or tuple of axes)
+    logical: Dict[str, Tuple[str, ...]]
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    opt_fsdp_axes: Tuple[str, ...] = ("data",)
+
+    def physical(self, name: Optional[str]):
+        if name is None:
+            return None
+        axes = self.logical.get(name)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def axis_size(self, name: str) -> int:
+        axes = self.logical.get(name, ())
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def default_rules(mesh: Mesh) -> ShardingRules:
+    names = mesh.axis_names
+    if "pod" in names:
+        return ShardingRules(
+            mesh=mesh,
+            logical={"batch": ("pod", "data"), "model": ("model",),
+                     "seq": ("model",), "expert": ("model",)},
+            fsdp_axes=("data",),
+            opt_fsdp_axes=("data", "pod"),
+        )
+    return ShardingRules(
+        mesh=mesh,
+        logical={"batch": ("data",), "model": ("model",),
+                 "seq": ("model",), "expert": ("model",)},
+        fsdp_axes=("data",),
+        opt_fsdp_axes=("data",),
+    )
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def shard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Constrain activation sharding by logical axes (no-op w/o rules).
+
+    A logical name is kept only if the corresponding dim is divisible by the
+    mapped physical axis size; 'batch' on dim 0 by convention.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = []
+    for dim, name in enumerate(logical_axes):
+        if name is None:
+            spec.append(None)
+            continue
+        size = rules.axis_size(name)
+        if size <= 1 or x.shape[dim] % size != 0:
+            spec.append(None)
+        else:
+            spec.append(rules.physical(name))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------- #
+# parameter sharding rules
+# ---------------------------------------------------------------------- #
+# NOTE: wk/wv are intentionally NOT column-parallel — GQA KV head counts
+# (e.g. 8) do not divide a 16-way model axis, and a col-sharded KV weight
+# forces XLA into activation/weight gathers inside attention.  KV weights
+# are small; they replicate on 'model' and FSDP on 'data'.
+_COL_PARALLEL = ("wq", "w_gate", "w_up", "in_proj")
+_ROW_PARALLEL = ("wo", "w_down", "out_proj")
+
+
+def _fsdp_extend(spec, shape, mesh_shape, fsdp_axes, min_size=1 << 20):
+    """Add FSDP sharding on the largest unsharded divisible dim."""
+    n = 1
+    for s in shape:
+        n *= s
+    if n < min_size:
+        return spec
+    fs = 1
+    for a in fsdp_axes:
+        fs *= mesh_shape.get(a, 1)
+    if fs <= 1:
+        return spec
+    cands = [i for i, s in enumerate(shape)
+             if spec[i] is None and s % fs == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda i: shape[i])
+    spec = list(spec)
+    spec[best] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return spec
+
+
+def infer_param_spec(path: str, shape: Tuple[int, ...],
+                     rules: ShardingRules,
+                     fsdp_axes: Optional[Tuple[str, ...]] = None) -> P:
+    """Map a parameter (by name path and shape) to a PartitionSpec."""
+    mesh_shape = dict(zip(rules.mesh.axis_names,
+                          rules.mesh.devices.shape))
+    tp = rules.physical("model")
+    tp_size = rules.axis_size("model")
+    fsdp_axes = fsdp_axes or rules.fsdp_axes
+    leaf = path.split("/")[-1]
+    spec = [None] * len(shape)
+
+    if len(shape) >= 2:
+        if leaf in ("embed", "lm_head") and shape[0] % tp_size == 0:
+            spec[0] = tp                      # vocab-parallel
+        elif len(shape) == 3:                 # (E, d, f) expert stacks
+            if shape[0] % tp_size == 0:
+                spec[0] = tp                  # expert-parallel
+            elif shape[-1] % tp_size == 0:
+                spec[-1] = tp
+        elif leaf in _COL_PARALLEL and shape[-1] % tp_size == 0:
+            spec[-1] = tp
+        elif leaf in _ROW_PARALLEL and shape[0] % tp_size == 0:
+            spec[0] = tp
+        elif leaf in ("wk", "wv", "router"):
+            pass                              # replicated on 'model'
+        elif shape[-1] % tp_size == 0 and min(shape) >= 1024:
+            spec[-1] = tp                     # generic large matrix
+    # stacked-layer leading dim (L, ...) from scan stacking: never shard it —
+    # detected upstream by passing shape without the L dim; here we just
+    # FSDP-extend what's left.
+    spec = _fsdp_extend(spec, shape, mesh_shape, fsdp_axes)
+    return P(*spec)
+
+
+def param_specs(params, rules: ShardingRules, stacked: bool = True,
+                fsdp_axes: Optional[Tuple[str, ...]] = None):
+    """PartitionSpec pytree for a parameter pytree.
+
+    ``stacked``: models stack per-layer params under a leading L dim (scan);
+    the leading dim is kept unsharded and rules apply to the rest.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        shape = leaf.shape
+        is_stacked = stacked and "layers" in name and len(shape) >= 2
+        if is_stacked:
+            sub = infer_param_spec(name, shape[1:], rules, fsdp_axes)
+            specs.append(P(None, *sub))
+        else:
+            specs.append(infer_param_spec(name, shape, rules, fsdp_axes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(rules: ShardingRules, ndim: int = 2) -> P:
+    return P(rules.physical("batch"), *([None] * (ndim - 1)))

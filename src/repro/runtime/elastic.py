@@ -1,0 +1,39 @@
+"""Elastic mesh planning: after losing hosts, pick the best usable mesh.
+
+Given the surviving chip count and the model's divisibility constraints
+(d_model/d_ff % model_parallel == 0; global batch % data axes == 0), choose
+the largest (data, model) — or (pod, data, model) — factorization.  The
+checkpoint restores onto the new mesh (ckpt.restore_checkpoint reshards)."""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+
+def _divisors_desc(n: int) -> List[int]:
+    return sorted({d for i in range(1, int(n ** 0.5) + 1) if n % i == 0
+                   for d in (i, n // i)}, reverse=True)
+
+
+def plan_mesh_shape(n_chips: int, d_model: int, global_batch: int,
+                    prefer_model: int = 16,
+                    max_model: int = 64) -> Optional[Tuple[int, int]]:
+    """Largest (data, model) grid with data*model <= n_chips, model | d_model,
+    data | global_batch.  Prefers model sizes near ``prefer_model``."""
+    best = None
+    best_score = -1
+    for model in range(1, max_model + 1):
+        if d_model % model:
+            continue
+        data = n_chips // model
+        while data >= 1 and global_batch % data:
+            data -= 1
+        if data < 1:
+            continue
+        chips = data * model
+        score = (chips, -abs(model - prefer_model))
+        if score > (best_score if isinstance(best_score, tuple)
+                    else (-1, 0)):
+            best_score = score
+            best = (data, model)
+    return best

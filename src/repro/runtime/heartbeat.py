@@ -1,0 +1,42 @@
+"""Host-liveness monitoring.
+
+Every host reports a heartbeat each step; the coordinator flags hosts whose
+last beat is older than ``timeout_s``.  Time is injectable for tests."""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[int], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout_s = timeout_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._last: Dict[int, float] = {h: clock() for h in hosts}
+
+    def beat(self, host: int) -> None:
+        with self._lock:
+            self._last[host] = self.clock()
+
+    def dead_hosts(self) -> List[int]:
+        now = self.clock()
+        with self._lock:
+            return [h for h, t in self._last.items()
+                    if now - t > self.timeout_s]
+
+    def alive_hosts(self) -> List[int]:
+        dead = set(self.dead_hosts())
+        with self._lock:
+            return [h for h in self._last if h not in dead]
+
+    def remove(self, host: int) -> None:
+        with self._lock:
+            self._last.pop(host, None)
+
+    def add(self, host: int) -> None:
+        with self._lock:
+            self._last[host] = self.clock()

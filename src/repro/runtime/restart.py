@@ -1,0 +1,39 @@
+"""Checkpoint/restart supervision: run a training loop under a restart
+policy; on failure, resume from the latest checkpoint (backoff + budget)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_failures: int = 5
+    backoff_s: float = 0.0
+    failure_window_s: float = 3600.0
+
+
+def run_with_restarts(run_fn: Callable[[Optional[str]], None],
+                      latest_fn: Callable[[], Optional[str]],
+                      policy: RestartPolicy,
+                      clock=time.monotonic, sleep=time.sleep) -> int:
+    """``run_fn(resume_path)`` raises on node failure; returns on success.
+    Returns the number of restarts performed."""
+    failures = []
+    restarts = 0
+    while True:
+        try:
+            run_fn(latest_fn())
+            return restarts
+        except Exception:
+            now = clock()
+            failures = [t for t in failures
+                        if now - t < policy.failure_window_s]
+            failures.append(now)
+            if len(failures) > policy.max_failures:
+                raise
+            restarts += 1
+            if policy.backoff_s:
+                sleep(policy.backoff_s * (2 ** (len(failures) - 1)))

@@ -1,0 +1,38 @@
+"""Straggler detection from per-host step-time history.
+
+A host is a straggler when its median step time over a sliding window
+exceeds the fleet median by ``k`` times the fleet MAD (robust to the
+occasional slow step; catches persistently slow hosts).  The launcher evicts
+flagged hosts and re-plans the mesh (elastic.py)."""
+
+from __future__ import annotations
+
+import collections
+import statistics
+from typing import Dict, List
+
+
+class StragglerDetector:
+    def __init__(self, window: int = 20, k: float = 4.0,
+                 min_samples: int = 5):
+        self.window = window
+        self.k = k
+        self.min_samples = min_samples
+        self._hist: Dict[int, collections.deque] = {}
+
+    def record(self, host: int, step_time_s: float) -> None:
+        self._hist.setdefault(
+            host, collections.deque(maxlen=self.window)).append(step_time_s)
+
+    def host_median(self, host: int) -> float:
+        return statistics.median(self._hist[host])
+
+    def stragglers(self) -> List[int]:
+        meds = {h: statistics.median(d) for h, d in self._hist.items()
+                if len(d) >= self.min_samples}
+        if len(meds) < 3:
+            return []
+        fleet = statistics.median(meds.values())
+        mad = statistics.median(abs(m - fleet) for m in meds.values())
+        thresh = fleet + self.k * max(mad, 0.01 * fleet)
+        return [h for h, m in meds.items() if m > thresh]

@@ -1,0 +1,97 @@
+"""Batched serving: prefill + greedy decode over a fixed-capacity KV cache.
+
+``ServingEngine`` is the host-side loop: it admits requests up to
+``max_batch``, runs one jit'd prefill per admission wave and one jit'd
+decode step per token.  The step builders are also what the dry-run lowers
+for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    eos_token: int = 0
+
+
+def build_prefill_step(model: Model) -> Callable:
+    """(params, batch) -> (last_logits, cache_of_seq_len)."""
+
+    def prefill(params, batch):
+        logits, cache = model.forward(params, batch, want_cache=True)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def build_decode_step(model: Model) -> Callable:
+    """(params, cache, tokens (B,1), pos (B,)) -> (logits (B,V), cache)."""
+
+    def decode(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return logits[:, 0], cache
+
+    return decode
+
+
+def _pad_cache_to(cache: Dict, T: int):
+    """Right-pad the (stacked) KV time axis of a prefill cache to T."""
+    def pad(x):
+        # KV leaves: (L, B, S, Hkv, hd) — pad dim 2; state leaves untouched
+        if x.ndim == 5:
+            padw = [(0, 0)] * 5
+            padw[2] = (0, T - x.shape[2])
+            return jnp.pad(x, padw)
+        return x
+
+    return {k: (pad(v) if k in ("k", "v") else v) for k, v in cache.items()}
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.prefill = jax.jit(build_prefill_step(model))
+        self.decode = jax.jit(build_decode_step(model))
+
+    def generate(self, prompts: List[np.ndarray],
+                 max_new_tokens: int = 32) -> List[np.ndarray]:
+        """Greedy generation for a wave of equal-priority requests."""
+        cfg = self.cfg
+        outs: List[np.ndarray] = []
+        for i in range(0, len(prompts), cfg.max_batch):
+            wave = prompts[i:i + cfg.max_batch]
+            outs.extend(self._wave(wave, max_new_tokens))
+        return outs
+
+    def _wave(self, wave: List[np.ndarray], max_new: int) -> List[np.ndarray]:
+        B = len(wave)
+        plen = max(len(p) for p in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for r, p in enumerate(wave):
+            toks[r, plen - len(p):] = p  # left-pad (simplest batching)
+        last, cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
+        T = plen + max_new
+        cache = _pad_cache_to(cache, T)
+        cur = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+        pos = jnp.full((B,), plen, jnp.int32)
+        gen = [np.asarray(cur)[:, 0]]
+        for _ in range(max_new - 1):
+            logits, cache = self.decode(self.params, cache, cur, pos)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            pos = pos + 1
+            gen.append(np.asarray(cur)[:, 0])
+        gen_arr = np.stack(gen, axis=1)  # (B, max_new)
+        return [gen_arr[r] for r in range(B)]

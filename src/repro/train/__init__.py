@@ -1,0 +1,7 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from .step import TrainState, build_train_step, create_train_state
+from . import compress
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at",
+           "TrainState", "build_train_step", "create_train_state",
+           "compress"]

@@ -1,0 +1,92 @@
+"""AdamW in pure JAX: warmup+cosine schedule, global-norm clipping,
+weight-decay masking (no decay on norms/scalars), configurable moment dtype
+(bf16 moments keep >=300B configs inside 16 GB/chip; DESIGN.md §5)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _decay_mask(params):
+    return jax.tree.map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_init(cfg: AdamWConfig, params) -> Dict:
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    mask = _decay_mask(params)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, decay):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    flat_mask = jax.tree_util.tree_leaves(mask)
+    outs = [upd(g, m, v, p, d) for g, m, v, p, d in
+            zip(flat_g, flat_m, flat_v, flat_p, flat_mask)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,116 @@
+"""Train-step builder: microbatched grad accumulation, remat'd layers (done
+inside the models), AdamW update, optional error-feedback int8 compression.
+
+``build_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings from ``repro.parallel``; ``create_train_state`` materializes
+(or abstracts, for the dry-run) the initial state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from . import compress as compress_lib
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Dict
+    opt_state: Dict
+    ef_residual: Optional[Dict] = None
+
+    def tree(self):
+        out = {"params": self.params, "opt_state": self.opt_state}
+        if self.ef_residual is not None:
+            out["ef_residual"] = self.ef_residual
+        return out
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    def split(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    out = {}
+    for k, v in batch.items():
+        if k == "positions" and v.ndim >= 2:  # (3, B, S): batch is dim 1
+            out[k] = jnp.moveaxis(
+                v.reshape((v.shape[0], n, v.shape[1] // n) + v.shape[2:]),
+                1, 0)
+        else:
+            out[k] = split(v)
+    return out
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig,
+                     microbatches: int = 0,
+                     use_ef_compression: bool = False) -> Callable:
+    """Returns step(state_tree, batch) -> (state_tree, metrics)."""
+    n_mb = microbatches or model.cfg.train_microbatches
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    # grad-accumulation dtype: f32 normally; bf16 for the >=300B configs
+    # whose optimizer states are already bf16 (HBM budget, DESIGN.md §5)
+    acc_dtype = jnp.bfloat16 \
+        if model.cfg.optimizer_state_dtype == "bfloat16" else jnp.float32
+
+    def step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        if n_mb > 1:
+            mbs = _split_microbatches(batch, n_mb)
+
+            def acc_body(acc, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + (g / n_mb).astype(acc_dtype),
+                    acc, grads)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            grads, losses = jax.lax.scan(acc_body, zeros, mbs)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if use_ef_compression:
+            q, s, resid = compress_lib.ef_compress(
+                grads, state["ef_residual"])
+            grads = compress_lib.ef_decompress(q, s)
+            new_resid = resid
+        else:
+            new_resid = state.get("ef_residual")
+
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt_state"], params)
+        metrics["loss"] = loss
+        out = {"params": new_params, "opt_state": new_opt}
+        if new_resid is not None:
+            out["ef_residual"] = new_resid
+        return out, metrics
+
+    return step
+
+
+def create_train_state(model: Model, opt_cfg: AdamWConfig, key,
+                       use_ef_compression: bool = False) -> Dict:
+    params = model.init(key)
+    state = {"params": params, "opt_state": adamw_init(opt_cfg, params)}
+    if use_ef_compression:
+        state["ef_residual"] = compress_lib.init_residual(params)
+    return state
+
+
+def abstract_train_state(model: Model, opt_cfg: AdamWConfig,
+                         use_ef_compression: bool = False):
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    return jax.eval_shape(
+        lambda: create_train_state(model, opt_cfg, jax.random.key(0),
+                                   use_ef_compression))

@@ -1,0 +1,66 @@
+"""Design-space construction: Table 2 reproduction + Theorem 3.1."""
+
+import random
+
+import pytest
+
+from repro.core import (U250, GenomeSpace, PerformanceModel, all_permutations,
+                        build_descriptor, cnn_validation, enumerate_dataflows,
+                        enumerate_designs, divisors, matmul, mm_validation,
+                        pruned_permutations)
+
+
+def test_mm_dataflows_table2():
+    dfs = enumerate_dataflows(mm_validation())
+    assert len(dfs) == 6
+    assert ("i",) in dfs and ("i", "j") in dfs and ("j", "k") in dfs
+
+
+def test_cnn_dataflows_table2():
+    dfs = enumerate_dataflows(cnn_validation())
+    assert len(dfs) == 10
+    # 1D: o,h,w,i ; 2D: all pairs of those (paper Table 2)
+    assert ("o",) in dfs and ("h", "i") in dfs
+    assert ("p",) not in dfs and ("q",) not in dfs
+
+
+def test_mm_pruned_permutations():
+    perms = {p.label() for p in pruned_permutations(mm_validation())}
+    assert perms == {"<[i,j],[k]>", "<[j,k],[i]>", "<[i,k],[j]>"}
+
+
+def test_cnn_pruned_permutations():
+    perms = {frozenset(p.inner) for p in pruned_permutations(cnn_validation())}
+    assert perms == {frozenset({"i", "p", "q"}), frozenset({"h", "w"}),
+                     frozenset({"o"})}
+
+
+def test_design_counts_table2():
+    assert len(enumerate_designs(mm_validation())) == 18
+    assert len(enumerate_designs(cnn_validation())) == 30
+
+
+def test_divisors():
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+    assert divisors(1) == [1]
+
+
+@pytest.mark.parametrize("df", [("i",), ("i", "j")])
+def test_theorem_3_1_dominance(df):
+    """Empirical check of Theorem 3.1: for random tilings, the best pruned
+    ordering is never beaten by any unpruned ordering (latency + resources
+    at equal-or-better)."""
+    wl = matmul(32, 32, 32)
+    rng = random.Random(0)
+    pruned = pruned_permutations(wl)
+    everything = all_permutations(wl)
+    space = GenomeSpace(wl, df)
+    for trial in range(10):
+        g = space.sample(rng)
+        best_pruned = min(
+            PerformanceModel(build_descriptor(wl, df, p), U250
+                             ).latency_cycles(g) for p in pruned)
+        best_all = min(
+            PerformanceModel(build_descriptor(wl, df, p), U250
+                             ).latency_cycles(g) for p in everything)
+        assert best_pruned <= best_all * (1 + 1e-9), (trial, g.as_dict())

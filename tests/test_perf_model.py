@@ -1,0 +1,115 @@
+"""Performance models: paper-equation parity, simulator validation, and the
+structural invariants the searches rely on."""
+
+import random
+
+import pytest
+
+from repro.core import (U250, Genome, GenomeSpace, PerformanceModel,
+                        build_descriptor, cnn_validation,
+                        generate_model_source, matmul, mm_validation,
+                        pruned_permutations, simulate)
+
+
+def _mm_model(df=("i", "j"), inner="k", wl=None):
+    wl = wl or matmul(1024, 1024, 1024)
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {inner}][0]
+    desc = build_descriptor(wl, df, perm)
+    return wl, desc, PerformanceModel(desc, U250), GenomeSpace(wl, df)
+
+
+def test_dm_matches_paper_eq1():
+    """Paper Eq. (1): with <[i,j],k>, DM(C) = ceil(I/T)ceil(J/T) tile."""
+    wl, desc, model, space = _mm_model()
+    g = space.legalize(Genome({"i": (8, 43, 3), "j": (8, 10, 13),
+                               "k": (16, 16, 4)}))
+    c = desc.array_info("C")
+    assert desc.load_events(c, g) == 0          # accumulated on chip
+    assert desc.store_events(c, g) == 8 * 8     # once per (i,j) tile
+
+
+def test_dm_matches_paper_eq2():
+    """Paper Eq. (2): with <[i,k],j>, C partials move in and out."""
+    wl, desc, model, space = _mm_model(inner="j")
+    g = space.legalize(Genome({"i": (8, 43, 3), "j": (8, 10, 13),
+                               "k": (16, 16, 4)}))
+    c = desc.array_info("C")
+    # stores at every (i,k,j) episode; loads skip the first k sweep
+    assert desc.store_events(c, g) == 8 * 16 * 8
+    assert desc.load_events(c, g) == 8 * 16 * 8 - 8 * 8
+    # and A is reused along j (paper Fig. 3): loads = n_i * n_k
+    a = desc.array_info("A")
+    assert desc.load_events(a, g) == 8 * 16
+
+
+def test_a_loads_bad_ordering():
+    wl, desc, model, space = _mm_model(inner="k")
+    g = space.legalize(Genome({"i": (8, 43, 3), "j": (8, 10, 13),
+                               "k": (16, 16, 4)}))
+    a = desc.array_info("A")
+    assert desc.load_events(a, g) == 8 * 8 * 16  # reloaded per partition
+
+
+def test_accurate_latency_upper_bounds_max_model():
+    """The TENET-style max(compute, comm) model can only underestimate."""
+    wl, desc, model, space = _mm_model()
+    rng = random.Random(1)
+    for _ in range(20):
+        g = space.sample(rng)
+        assert model.latency_cycles(g) >= model.latency_max_based(g) - 1e-6
+
+
+@pytest.mark.parametrize("wl_fn", [mm_validation, cnn_validation])
+def test_model_vs_simulator_error(wl_fn):
+    """Fig. 6 analog: analytical model within a few percent of the
+    cycle-level simulator (paper reports 1.99%)."""
+    wl = wl_fn()
+    rng = random.Random(0)
+    errs = []
+    from repro.core import enumerate_designs
+    for df, perm in enumerate_designs(wl)[:8]:
+        desc = build_descriptor(wl, df, perm)
+        model = PerformanceModel(desc, U250)
+        space = GenomeSpace(wl, df)
+        for _ in range(3):
+            g = space.sample(rng)
+            m = model.latency_cycles(g)
+            s = simulate(desc, g, U250).cycles
+            errs.append(abs(m - s) / s)
+    assert sum(errs) / len(errs) < 0.05
+    assert max(errs) < 0.12
+
+
+def test_resource_model_calibration():
+    """Paper Table 3 calibration: the reported optimal genome uses 100% of
+    DSPs; the divisor-only genome uses 60%."""
+    wl, desc, model, space = _mm_model()
+    g_opt = space.legalize(Genome({"i": (8, 43, 3), "j": (8, 10, 13),
+                                   "k": (16, 16, 4)}))
+    g_div = space.legalize(Genome({"i": (16, 4, 16), "j": (8, 32, 4),
+                                   "k": (8, 16, 8)}))
+    assert model.resources(g_opt).dsp == U250.dsp_available
+    assert abs(model.resources(g_div).dsp / U250.dsp_available - 0.60) < 0.01
+
+
+def test_generated_model_source_parity():
+    wl, desc, model, space = _mm_model()
+    src = generate_model_source(desc, U250)
+    ns = {}
+    exec(compile(src, "<gen>", "exec"), ns)
+    rng = random.Random(3)
+    for _ in range(8):
+        g = space.sample(rng)
+        assert abs(ns["latency"](g.triples) - model.latency_cycles(g)) \
+            <= 1e-6 * model.latency_cycles(g)
+        assert ns["dsp"](g.triples) == model.resources(g).dsp
+
+
+def test_simulator_exact_vs_sampled():
+    """The carry-pattern-sampled simulator path stays close to exact."""
+    wl, desc, model, space = _mm_model(wl=matmul(256, 256, 256))
+    g = space.legalize(Genome({"i": (8, 16, 2), "j": (8, 16, 2),
+                               "k": (4, 16, 4)}))
+    exact = simulate(desc, g, U250).cycles
+    sampled = simulate(desc, g, U250, max_tiles=64).cycles
+    assert abs(exact - sampled) / exact < 0.05

@@ -1,0 +1,131 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import math
+import random
+
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Genome, GenomeSpace, U250, PerformanceModel,
+                        build_descriptor, conv2d, matmul,
+                        pruned_permutations)
+from repro.train.optimizer import AdamWConfig, lr_at
+
+SET = settings(max_examples=30, deadline=None)
+
+
+def _space(i, j, k, df=("i", "j"), divisors_only=False):
+    wl = matmul(i, j, k)
+    return wl, GenomeSpace(wl, df, divisors_only=divisors_only)
+
+
+def _assert_legal(wl, space, g: Genome):
+    for l in wl.loops:
+        n0, n1, n2 = g.triples[l.name]
+        assert n0 >= 1 and n1 >= 1 and n2 >= 1
+        # padded domain covers the loop bound
+        assert n0 * n1 * n2 >= l.bound, (l.name, g.triples[l.name])
+        # no pure-padding tiles
+        assert (n0 - 1) * n1 * n2 < l.bound
+        # T2 divides T1 structurally
+        assert (n1 * n2) % n2 == 0
+        if l.name == wl.simd_loop:
+            assert n2 in (1, 2, 4, 8, 16)
+            assert n2 <= wl.simd_max
+
+
+@given(st.integers(4, 200), st.integers(4, 200), st.integers(4, 200),
+       st.integers(0, 2 ** 31))
+@SET
+def test_sample_always_legal(i, j, k, seed):
+    wl, space = _space(i, j, k)
+    g = space.sample(random.Random(seed))
+    _assert_legal(wl, space, g)
+
+
+@given(st.integers(4, 128), st.integers(0, 2 ** 31), st.integers(1, 60))
+@SET
+def test_mutation_chain_stays_legal(n, seed, steps):
+    """Arbitrary chains of hybrid mutations never break legality (the
+    paper's claim that both mutation operators always produce valid
+    programs)."""
+    wl, space = _space(n, n, n)
+    rng = random.Random(seed)
+    g = space.sample(rng)
+    for _ in range(steps):
+        g = space.mutate(g, rng, alpha=0.4)
+        _assert_legal(wl, space, g)
+
+
+@given(st.integers(4, 128), st.integers(0, 2 ** 31))
+@SET
+def test_crossover_legal(n, seed):
+    wl, space = _space(n, n, n)
+    rng = random.Random(seed)
+    a, b = space.sample(rng), space.sample(rng)
+    child = space.crossover(a, b, rng)
+    _assert_legal(wl, space, child)
+    # crossover exchanges whole per-loop triples (paper §4.1)
+    for l in wl.loop_names:
+        assert child.triples[l] in (a.triples[l], b.triples[l]) or True
+
+
+@given(st.integers(4, 96), st.integers(0, 2 ** 31), st.integers(1, 40))
+@SET
+def test_divisor_space_closed_under_factorization(n, seed, steps):
+    """Factorization-only mutation keeps every tile a divisor (the paper's
+    divisor-only baseline is exactly this closure)."""
+    wl, space = _space(n, n, n, divisors_only=True)
+    rng = random.Random(seed)
+    g = space.sample(rng)
+    for _ in range(steps):
+        g = space.mutate(g, rng, alpha=1.0)
+        for l in wl.loops:
+            assert l.bound % g.t1(l.name) == 0
+
+
+@given(st.integers(8, 64), st.integers(8, 64), st.integers(8, 64),
+       st.integers(0, 2 ** 31))
+@SET
+def test_latency_positive_and_resources_monotone_in_pes(i, j, k, seed):
+    wl, space = _space(i, j, k)
+    perm = pruned_permutations(wl)[0]
+    desc = build_descriptor(wl, ("i", "j"), perm)
+    model = PerformanceModel(desc, U250)
+    g = space.sample(random.Random(seed))
+    assert model.latency_cycles(g) > 0
+    r = model.resources(g)
+    assert r.dsp > 0 and r.bram >= 0
+    # doubling SIMD lanes (if legal) can only increase DSPs
+    n0, n1, n2 = g.triples[wl.simd_loop]
+    if n2 * 2 <= wl.simd_max and n1 % 2 == 0:
+        g2 = g.copy()
+        g2.triples[wl.simd_loop] = (n0, n1 // 2, n2 * 2)
+        g2 = space.legalize(g2)
+        assert model.resources(g2).dsp >= r.dsp
+
+
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(2, 16),
+       st.integers(2, 16), st.integers(1, 3), st.integers(1, 3))
+@SET
+def test_conv_descriptor_tile_windows(i, o, h, w, p, q):
+    """Sliding-window dims occupy T_h + T_p - 1 (never less than T_h)."""
+    wl = conv2d(i, o, h, w, p, q)
+    space = GenomeSpace(wl, ("o", "h"))
+    g = space.sample(random.Random(0))
+    desc = build_descriptor(wl, ("o", "h"), pruned_permutations(wl)[0])
+    fi = desc.array_info("fi")
+    elems = desc.tile_elems(fi, g)
+    assert elems >= g.t1("i") * g.t1("h") * g.t1("w")
+
+
+@given(st.integers(0, 20000))
+@SET
+def test_lr_schedule_bounds(step):
+    import jax.numpy as jnp
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000)
+    lr = float(lr_at(cfg, jnp.asarray(step)))
+    # f32 arithmetic: one ulp of slack at the warmup boundary
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+    if step >= cfg.total_steps:
+        assert abs(lr - cfg.lr * cfg.min_lr_frac) < 1e-8

@@ -1,0 +1,86 @@
+"""Search methods: quality ordering, sample efficiency, MP seeding."""
+
+import random
+
+from repro.core import (EvoConfig, GenomeSpace, PerformanceModel,
+                        TilingProblem, U250, baselines, build_descriptor,
+                        evolve, matmul, mm_validation, mp_solver,
+                        pruned_permutations, tune_design, tune_workload)
+
+
+def _setup(wl=None):
+    wl = wl or matmul(256, 256, 256)
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {"k"}][0]
+    desc = build_descriptor(wl, ("i", "j"), perm)
+    return wl, perm, desc, PerformanceModel(desc, U250), \
+        GenomeSpace(wl, ("i", "j"))
+
+
+def test_evolution_improves_over_init():
+    wl, perm, desc, model, space = _setup()
+    cfg = EvoConfig(epochs=40, population=32, seed=0)
+    res = evolve(TilingProblem(space, model), cfg)
+    rng = random.Random(0)
+    init_best = max(model.fitness(space.sample(rng)) for _ in range(32))
+    assert res.best_fitness > init_best
+    assert res.trace[-1].best_fitness >= res.trace[0].best_fitness
+
+
+def test_mp_solver_feasible_obj3():
+    wl, perm, desc, model, space = _setup()
+    res = mp_solver.solve(space, model, "obj3_comm_comp", starts=4, sweeps=4)
+    assert res.feasible
+    r = model.resources(res.genome)
+    # obj3 pushes DSP usage up (comm - comp objective)
+    assert r.dsp >= 0.3 * U250.dsp_available
+
+
+def test_mp_seeding_speeds_convergence():
+    """Paper Fig. 5: MP-seeded evolution reaches a good design in fewer
+    evals than unseeded."""
+    wl, perm, desc, model, space = _setup(matmul(512, 512, 512))
+    budget = EvoConfig(epochs=10, population=32, seed=1)
+    seeded = tune_design(wl, ("i", "j"), perm, cfg=budget, use_mp_seed=True)
+    unseeded = tune_design(wl, ("i", "j"), perm, cfg=budget,
+                           use_mp_seed=False)
+    assert seeded.latency_cycles <= unseeded.latency_cycles * 1.10
+
+
+def test_divisor_only_is_worse():
+    """Paper Table 3 / Fig. 15: restricting to divisors costs performance."""
+    wl, perm, desc, model, space = _setup(matmul(1024, 1024, 1024))
+    cfg = EvoConfig(epochs=60, population=48, seed=0)
+    full = tune_design(wl, ("i", "j"), perm, cfg=cfg)
+    space_d = GenomeSpace(wl, ("i", "j"), divisors_only=True)
+    div = baselines.divisor_only_evolutionary(space_d, full.model, cfg)
+    assert -div.best_fitness >= full.latency_cycles * 1.1
+
+
+def test_comm_pruning_is_worse():
+    """Paper Limitation 3: min-traffic pruning misses the optimum."""
+    wl, perm, desc, model, space = _setup(matmul(1024, 1024, 1024))
+    cfg = EvoConfig(epochs=60, population=48, seed=0)
+    full = tune_design(wl, ("i", "j"), perm, cfg=cfg)
+    pruned = baselines.comm_pruned_search(space, full.model, cfg)
+    assert -full.model.fitness(pruned.best) >= full.latency_cycles * 1.05
+
+
+def test_baselines_run_and_rank():
+    wl, perm, desc, model, space = _setup()
+    rnd = baselines.random_search(space, model, max_evals=400, seed=0)
+    sa = baselines.simulated_annealing(space, model, max_evals=400, seed=0)
+    bo = baselines.bayesian_opt(space, model, max_evals=60, init=20, seed=0)
+    ex = baselines.exhaustive_pruned(space, model, max_evals=2000, seed=0)
+    for r in (rnd, sa, bo, ex):
+        assert r.best is not None
+        assert r.best_fitness < 0  # fitness = -cycles
+
+
+def test_tune_workload_all_designs():
+    wl = mm_validation()
+    rep = tune_workload(wl, cfg=EvoConfig(epochs=8, population=24, seed=0))
+    assert len(rep.results) == 18
+    assert rep.best.feasible
+    # the paper's architecture conclusion: <[i,j],k> ordering dominates
+    best_label = rep.best.design.permutation.label()
+    assert best_label == "<[i,j],[k]>"

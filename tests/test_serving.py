@@ -1,0 +1,54 @@
+"""Serving engine: prefill+decode equals teacher forcing; batch waves."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.serve import ServeConfig, ServingEngine
+
+
+def _engine(arch="smollm-135m"):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params, ServingEngine(model, params,
+                                        ServeConfig(max_batch=4))
+
+
+def test_greedy_generation_matches_manual_decode():
+    model, params, eng = _engine()
+    prompt = np.array([5, 9, 2, 7], np.int32)
+    out = eng.generate([prompt], max_new_tokens=6)[0]
+    # manual: full forward re-run per step (teacher forcing on own output)
+    seq = list(prompt)
+    manual = []
+    for _ in range(6):
+        logits, _ = model.forward(
+            params, {"tokens": jnp.asarray([seq], jnp.int32)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        manual.append(nxt)
+        seq.append(nxt)
+    assert list(out) == manual
+
+
+def test_generation_batching_waves():
+    model, params, eng = _engine()
+    prompts = [np.array([i + 1, i + 2], np.int32) for i in range(7)]
+    outs = eng.generate(prompts, max_new_tokens=4)
+    assert len(outs) == 7
+    assert all(len(o) == 4 for o in outs)
+    # batching must not change results
+    solo = eng.generate([prompts[5]], max_new_tokens=4)[0]
+    np.testing.assert_array_equal(outs[5], solo)
+
+
+def test_mixed_length_prompts_left_pad():
+    model, params, eng = _engine()
+    prompts = [np.array([3], np.int32), np.array([4, 5, 6], np.int32)]
+    outs = eng.generate(prompts, max_new_tokens=3)
+    solo1 = eng.generate([prompts[1]], max_new_tokens=3)[0]
+    np.testing.assert_array_equal(outs[1], solo1)
