@@ -23,9 +23,10 @@ def main() -> None:
                     help="skip the multi-minute network studies")
     args = ap.parse_args()
 
-    from . import paper_mm, paper_cnn, roofline
+    from . import paper_mm, paper_cnn, roofline, search_speed
 
     benches = [
+        ("search_speed", search_speed.bench_search_speed),
         ("table2", paper_mm.bench_table2),
         ("fig1_fig15", paper_mm.bench_fig1_fig15),
         ("table3", paper_mm.bench_table3),

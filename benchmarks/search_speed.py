@@ -1,0 +1,146 @@
+"""Search-throughput benchmark: the paper's headline is search *speed*
+("90% of the optimal performance in 5 seconds with a single CPU thread" for
+1024^3 MM), so this bench tracks the metrics that speed decomposes into:
+
+  * evals/sec of the fitness pipeline — serial scalar loop vs. the
+    generation-batched NumPy engine (``BatchPerformanceModel``),
+  * wall-clock to reach 90% of the final best fitness on the winning design,
+  * full 18-design sweep wall-clock — serial vs. process-pool
+    ``SearchSession`` with incumbent early-abort.
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only search_speed``
+or standalone: ``PYTHONPATH=src python -m benchmarks.search_speed``.
+Emits CSV rows and writes ``experiments/bench/search_speed.json`` for the
+bench trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+
+import random
+
+from repro.core import (BatchPerformanceModel, EvoConfig, GenomeSpace,
+                        PerformanceModel, SearchSession, SessionConfig,
+                        TilingProblem, U250, build_descriptor, evolve,
+                        mm_1024, pruned_permutations)
+
+from .common import emit, save_json
+
+_CFG = EvoConfig(epochs=60, population=64, seed=0)
+
+
+def _time_to_frac(trace, frac: float = 0.9) -> float:
+    """Seconds until best fitness first reaches ``frac`` of its final value
+    (fitness is negative latency, so 'within 1/frac of final latency')."""
+    final = trace[-1].best_fitness
+    for t in trace:
+        if t.best_fitness >= final / frac:
+            return t.seconds
+    return trace[-1].seconds
+
+
+def bench_search_speed() -> None:
+    wl = mm_1024()
+    df = ("i", "j")
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {"k"}][0]
+    desc = build_descriptor(wl, df, perm)
+    model = PerformanceModel(desc, U250)
+    space = GenomeSpace(wl, df)
+
+    # 1) evaluation-engine throughput: the seed's per-genome Python loop vs
+    # one BatchPerformanceModel call over the same genomes (this is the
+    # acceptance metric: batched evaluation must be >= 5x the scalar loop).
+    batch_model = BatchPerformanceModel(desc, U250)
+    rng = random.Random(0)
+    pool = [space.sample(rng) for _ in range(4096)]
+    t0 = time.perf_counter()
+    scalar_fit = [model.fitness(g) for g in pool]
+    t_scalar = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batch_fit = batch_model.fitness(pool)
+    t_batch = time.perf_counter() - t0
+    assert list(batch_fit) == scalar_fit  # bit-for-bit oracle match
+    eval_scalar = len(pool) / t_scalar
+    eval_batch = len(pool) / t_batch
+    eval_speedup = eval_batch / eval_scalar
+    emit("search_speed_eval_scalar", t_scalar / len(pool) * 1e6,
+         f"{eval_scalar:.0f} evals/s")
+    emit("search_speed_eval_batched", t_batch / len(pool) * 1e6,
+         f"{eval_batch:.0f} evals/s ({eval_speedup:.2f}x scalar)")
+
+    # 2) end-to-end evolve evals/sec: same seed => both visit the identical
+    # genome stream, so the ratio is the Amdahl-limited engine speedup
+    # (mutation/legalization stay per-genome Python).
+    serial = evolve(TilingProblem(space, model, batch=False), _CFG)
+    batched = evolve(TilingProblem(space, model, batch=True), _CFG)
+    assert batched.best_fitness == serial.best_fitness  # same landscape
+    speedup = batched.evals_per_sec / serial.evals_per_sec
+    emit("search_speed_evolve_scalar", 1e6 / serial.evals_per_sec,
+         f"{serial.evals_per_sec:.0f} evals/s")
+    emit("search_speed_evolve_batched", 1e6 / batched.evals_per_sec,
+         f"{batched.evals_per_sec:.0f} evals/s ({speedup:.2f}x scalar); "
+         f"t90={_time_to_frac(batched.trace):.3f}s")
+
+    # 2) full pruned-design-space sweep: serial vs parallel + early-abort.
+    sweep_cfg = EvoConfig(epochs=30, population=48, seed=0)
+    t0 = time.perf_counter()
+    rep_serial = SearchSession(
+        wl, cfg=sweep_cfg,
+        session=SessionConfig(executor="serial", early_abort=False)).run()
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep_par = SearchSession(
+        wl, cfg=sweep_cfg,
+        session=SessionConfig(executor="process", early_abort=True,
+                              abort_factor=2.0, probe_epochs=5)).run()
+    t_par = time.perf_counter() - t0
+    n_designs = len(rep_serial.results)
+    emit("search_speed_sweep_serial", t_serial / n_designs * 1e6,
+         f"{t_serial:.2f}s total")
+    emit("search_speed_sweep_parallel", t_par / n_designs * 1e6,
+         f"{t_par:.2f}s total ({t_serial / max(1e-9, t_par):.2f}x, "
+         f"{sum(r.aborted for r in rep_par.results)} aborted)")
+
+    save_json("search_speed", {
+        "workload": wl.name,
+        "design": f"[{','.join(df)}] {perm.label()}",
+        "evaluation_engine": {
+            "genomes": len(pool),
+            "scalar_evals_per_sec": eval_scalar,
+            "batched_evals_per_sec": eval_batch,
+            "speedup": eval_speedup,
+        },
+        "scalar": {
+            "evals": serial.evals, "seconds": serial.seconds,
+            "evals_per_sec": serial.evals_per_sec,
+            "best_latency_cycles": -serial.best_fitness,
+            "t90_s": _time_to_frac(serial.trace),
+        },
+        "batched": {
+            "evals": batched.evals, "seconds": batched.seconds,
+            "evals_per_sec": batched.evals_per_sec,
+            "best_latency_cycles": -batched.best_fitness,
+            "t90_s": _time_to_frac(batched.trace),
+        },
+        "batch_speedup_evals_per_sec": speedup,
+        "sweep": {
+            "designs": len(rep_serial.results),
+            "serial_s": t_serial,
+            "parallel_early_abort_s": t_par,
+            "parallel_aborted_designs":
+                sum(r.aborted for r in rep_par.results),
+            "serial_best_latency": rep_serial.best.latency_cycles,
+            "parallel_best_latency": rep_par.best.latency_cycles,
+        },
+        "trace_batched": [
+            {"evals": t.evals, "seconds": t.seconds,
+             "best_fitness": t.best_fitness,
+             "evals_per_sec": t.evals_per_sec}
+            for t in batched.trace],
+    })
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    bench_search_speed()

@@ -10,35 +10,55 @@ oversimplified baselines the paper quantifies (Fig. 1).
 
 import time
 
-from repro.core import (EvoConfig, GenomeSpace, U250, baselines, mm_1024,
-                        tune_workload)
+from repro.core import (EvoConfig, GenomeSpace, SearchSession, SessionConfig,
+                        U250, baselines, mm_1024, tune_workload)
 
-wl = mm_1024()
-print(f"workload: {wl.name}  (design space ~2^40 per the paper)")
 
-t0 = time.time()
-report = tune_workload(wl, cfg=EvoConfig(epochs=120, population=64, seed=0),
-                       time_budget_s=5.0)
-print(f"\ntuned all 18 designs in {time.time() - t0:.1f}s "
-      f"(paper: 90% of optimal in 5s, single thread)\n")
+def main() -> None:
+    wl = mm_1024()
+    print(f"workload: {wl.name}  (design space ~2^40 per the paper)")
 
-print(f"{'design':26s} {'GFLOP/s':>8s} {'DSP%':>5s} {'BRAM':>5s} feas")
-for r in sorted(report.results, key=lambda r: -r.throughput)[:8]:
-    print(f"{r.design.label():26s} {r.throughput / 1e9:8.0f} "
-          f"{100 * r.dsp // U250.dsp_available:4d}% {r.bram:5d} "
-          f"{r.feasible}")
+    t0 = time.time()
+    session = SearchSession(
+        wl, cfg=EvoConfig(epochs=120, population=64, seed=0),
+        time_budget_s=5.0,
+        session=SessionConfig(executor="process", early_abort=True))
+    report = session.run()
+    print(f"\ntuned all 18 designs in {time.time() - t0:.1f}s "
+          f"(paper: 90% of optimal in 5s, single thread; "
+          f"{sum(r.aborted for r in report.results)} dominated designs "
+          f"aborted)\n")
 
-best = report.best
-g = best.evo.best
-print(f"\nwinner: {best.design.label()}")
-print(f"  tiling (n0, n1, n2) per loop: {g.as_dict()}")
-nondiv = [l for l in wl.loop_names if wl.loop(l).bound % g.t1(l) != 0]
-print(f"  non-divisor tiles on loops: {nondiv or 'none'} "
-      f"(the paper's key design-space insight)")
+    print(f"{'design':26s} {'GFLOP/s':>8s} {'DSP%':>5s} {'BRAM':>5s} feas")
+    for r in sorted(report.results, key=lambda r: -r.throughput)[:8]:
+        print(f"{r.design.label():26s} {r.throughput / 1e9:8.0f} "
+              f"{100 * r.dsp // U250.dsp_available:4d}% {r.bram:5d} "
+              f"{r.feasible}")
 
-# the oversimplifications the paper quantifies
-space_d = GenomeSpace(wl, best.design.dataflow, divisors_only=True)
-cfg = EvoConfig(epochs=120, population=64, seed=0)
-div = baselines.divisor_only_evolutionary(space_d, best.model, cfg)
-print(f"\ndivisor-only search: {best.latency_cycles / -best.model.fitness(div.best):.2f}x "
-      f"of tuned performance (paper: 0.61x)")
+    best = report.best
+    g = best.evo.best
+    print(f"\nwinner: {best.design.label()}")
+    print(f"  tiling (n0, n1, n2) per loop: {g.as_dict()}")
+    nondiv = [l for l in wl.loop_names if wl.loop(l).bound % g.t1(l) != 0]
+    print(f"  non-divisor tiles on loops: {nondiv or 'none'} "
+          f"(the paper's key design-space insight)")
+
+    print("\nlatency-vs-resources Pareto frontier:")
+    for p in sorted(session.pareto(), key=lambda p: p.latency_cycles)[:6]:
+        print(f"  {p.design:26s} {p.latency_cycles:12.0f} cyc "
+              f"{100 * p.dsp // U250.dsp_available:4d}% DSP {p.bram:5d} BRAM")
+
+    # the oversimplifications the paper quantifies
+    space_d = GenomeSpace(wl, best.design.dataflow, divisors_only=True)
+    cfg = EvoConfig(epochs=120, population=64, seed=0)
+    div = baselines.divisor_only_evolutionary(space_d, best.model, cfg)
+    print(f"\ndivisor-only search: "
+          f"{best.latency_cycles / -best.model.fitness(div.best):.2f}x "
+          f"of tuned performance (paper: 0.61x)")
+
+
+# The process-pool engine uses the spawn context (fork is unsafe once jax's
+# threads exist), and spawn re-imports __main__ in each worker — so the
+# driver code must live under this guard.
+if __name__ == "__main__":
+    main()

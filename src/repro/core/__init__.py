@@ -15,12 +15,16 @@ from .design_space import (Genome, GenomeSpace, Permutation, DesignPoint,
                            all_permutations, enumerate_designs, divisors)
 from .descriptor import (DesignDescriptor, build_descriptor,
                          descriptor_to_json)
-from .perf_model import PerformanceModel, Resources, LatencyReport, \
-    generate_model_source
+from .perf_model import (PerformanceModel, BatchPerformanceModel,
+                         BatchEvaluation, Resources, LatencyReport,
+                         generate_model_source)
 from .simulator import simulate, SimReport
-from .evolutionary import EvoConfig, EvoResult, TilingProblem, evolve
+from .evolutionary import (EvoConfig, EvoResult, Problem, TilingProblem,
+                           evolve)
 from . import mp_solver, baselines
 from .tuner import tune_design, tune_workload, TuneReport, DesignResult
+from .engine import (SearchSession, SessionConfig, ParetoPoint,
+                     pareto_frontier)
 
 __all__ = [
     "U250", "TPU_V5E", "HardwareProfile", "DTYPE_BYTES",
@@ -31,9 +35,11 @@ __all__ = [
     "enumerate_dataflows", "pruned_permutations", "all_permutations",
     "enumerate_designs", "divisors",
     "DesignDescriptor", "build_descriptor", "descriptor_to_json",
-    "PerformanceModel", "Resources", "LatencyReport", "generate_model_source",
+    "PerformanceModel", "BatchPerformanceModel", "BatchEvaluation",
+    "Resources", "LatencyReport", "generate_model_source",
     "simulate", "SimReport",
-    "EvoConfig", "EvoResult", "TilingProblem", "evolve",
+    "EvoConfig", "EvoResult", "Problem", "TilingProblem", "evolve",
     "mp_solver", "baselines",
     "tune_design", "tune_workload", "TuneReport", "DesignResult",
+    "SearchSession", "SessionConfig", "ParetoPoint", "pareto_frontier",
 ]

@@ -235,6 +235,7 @@ def comm_pruned_search(space: GenomeSpace, model: PerformanceModel,
     problem = TilingProblem(space, model, fitness_fn=fitness)
     out = evolve(problem, cfg, seeds=[res.genome])
     out.best_fitness = model.fitness(out.best)  # report true fitness
+    out.dm_min = dm_min  # the pruning threshold (bytes), for analyses
     return out
 
 

@@ -186,11 +186,12 @@ class GenomeSpace:
                 n1, n2 = n1 * n2, 1
             if l.name == self.wl.simd_loop:
                 n2 = min(_pow2_floor(n2), self.wl.simd_max)
-            # keep tiles within the original bound
-            while n1 * n2 > l.bound and n1 > 1:
-                n1 = max(1, math.ceil(l.bound / n2))
-                break
+            # keep tiles within the original bound: clamp n1 so that
+            # T1 = n1*n2 <= bound while preserving the level-2 factor
             if n1 * n2 > l.bound:
+                n1 = max(1, l.bound // n2)
+            if n1 * n2 > l.bound:
+                # n2 alone exceeds the bound; shrink it too
                 if l.name == self.wl.simd_loop:
                     n2 = min(_pow2_floor(max(1, l.bound)), self.wl.simd_max)
                 else:

@@ -1,0 +1,250 @@
+"""Parallel design-sweep orchestrator for the Odyssey search stack.
+
+``tune_workload`` historically walked the 18–30 (dataflow, permutation)
+designs strictly serially with no cross-design sharing.  The
+:class:`SearchSession` engine generalizes that sweep:
+
+  * **Fan-out** — designs are dispatched over a ``concurrent.futures``
+    process or thread pool (or run serially), with lazy submission so that
+    cross-design state observed so far influences designs submitted later.
+  * **Incumbent sharing / early abort** — the best feasible latency found by
+    any finished design is passed to subsequently launched searches; after a
+    short probe phase, a design whose best genome's raw latency is still
+    worse than ``abort_factor x`` the incumbent is cut off (its result is
+    kept, marked ``aborted``).  Dominated designs stop consuming the eval
+    budget, which is how the paper's 5-second single-thread sweeps stay
+    cheap.
+  * **Descriptor/model caching** — descriptors, scalar models and the
+    batched evaluators are built once per design and reused across calls on
+    the same session.
+  * **Pareto frontier** — besides the single latency winner, the session
+    reports the non-dominated set over (latency, DSP, BRAM), which is what a
+    resource-constrained deployment actually selects from.
+
+``tuner.tune_workload`` is a thin wrapper over this class, so every existing
+call site keeps working; the engine is the opt-in fast path.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import multiprocessing
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .design_space import Permutation, enumerate_designs
+from .descriptor import DesignDescriptor, build_descriptor
+from .evolutionary import EvoConfig
+from .hardware import HardwareProfile, U250
+from .perf_model import BatchPerformanceModel, PerformanceModel
+from .workloads import Workload
+
+Design = Tuple[Tuple[str, ...], Permutation]
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    """How a :class:`SearchSession` executes the design sweep."""
+
+    executor: str = "process"        # "serial" | "thread" | "process"
+    max_workers: Optional[int] = None
+    early_abort: bool = True
+    abort_factor: float = 3.0        # give up if probe best > factor*incumbent
+    probe_epochs: int = 8            # epochs before the abort test applies
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoPoint:
+    """One non-dominated design on the (latency, DSP, BRAM) frontier."""
+
+    design: str
+    latency_cycles: float
+    throughput_gflops: float
+    dsp: int
+    bram: int
+    feasible: bool
+    tiling: Dict
+
+
+def pareto_frontier(results: Sequence) -> List:
+    """Non-dominated ``DesignResult``s by (latency, dsp, bram), minimized.
+
+    Aborted designs are excluded — they were cut *because* they are
+    dominated, so their metrics are not search optima.
+    """
+    pool = [r for r in results if not getattr(r, "aborted", False)]
+
+    def dominates(a, b):
+        le = (a.latency_cycles <= b.latency_cycles and a.dsp <= b.dsp
+              and a.bram <= b.bram)
+        lt = (a.latency_cycles < b.latency_cycles or a.dsp < b.dsp
+              or a.bram < b.bram)
+        return le and lt
+
+    return [r for r in pool
+            if not any(dominates(s, r) for s in pool if s is not r)]
+
+
+def _tune_payload(payload):
+    """Module-level worker so ProcessPoolExecutor can pickle the task."""
+    (wl, df, perm, hw, cfg, use_mp_seed, divisors_only,
+     incumbent, factor, probe) = payload
+    from .tuner import tune_design
+    return tune_design(wl, df, perm, hw=hw, cfg=cfg, use_mp_seed=use_mp_seed,
+                       divisors_only=divisors_only, abort_latency=incumbent,
+                       abort_factor=factor, probe_epochs=probe)
+
+
+class SearchSession:
+    """Orchestrates the full design sweep for one workload.
+
+    >>> session = SearchSession(mm_validation())
+    >>> report = session.run()           # TuneReport, same as tune_workload
+    >>> frontier = session.pareto()      # latency-vs-resources frontier
+
+    The process executor uses the multiprocessing *spawn* context (forking
+    a process that already started jax's threads can deadlock).  Spawn
+    re-imports ``__main__`` in each worker, so scripts driving a process
+    sweep must keep that call under ``if __name__ == "__main__":``.
+    """
+
+    def __init__(self, wl: Workload, hw: HardwareProfile = U250,
+                 cfg: Optional[EvoConfig] = None,
+                 use_mp_seed: bool = True,
+                 time_budget_s: Optional[float] = None,
+                 divisors_only: bool = False,
+                 designs: Optional[Sequence[Design]] = None,
+                 session: Optional[SessionConfig] = None):
+        self.wl = wl
+        self.hw = hw
+        self.designs: List[Design] = list(designs or enumerate_designs(wl))
+        cfg = cfg or EvoConfig()
+        if time_budget_s is not None:
+            per = time_budget_s / max(1, len(self.designs))
+            cfg = EvoConfig(**{**cfg.__dict__, "time_budget_s": per})
+        self.cfg = cfg
+        self.use_mp_seed = use_mp_seed
+        self.divisors_only = divisors_only
+        self.session = session or SessionConfig()
+        self.report = None
+        self._incumbent: Optional[float] = None
+        self._built: Dict[Design, Tuple[DesignDescriptor, PerformanceModel,
+                                        BatchPerformanceModel]] = {}
+
+    # -- cached per-design construction -----------------------------------
+    def built(self, design: Design
+              ) -> Tuple[DesignDescriptor, PerformanceModel,
+                         BatchPerformanceModel]:
+        """Descriptor + scalar model + batch model, built once per design."""
+        if design not in self._built:
+            df, perm = design
+            desc = build_descriptor(self.wl, df, perm)
+            model = PerformanceModel(desc, self.hw)
+            self._built[design] = (desc, model,
+                                   BatchPerformanceModel(desc, self.hw))
+        return self._built[design]
+
+    # -- incumbent bookkeeping ---------------------------------------------
+    def _observe(self, res) -> None:
+        if res.feasible and not res.aborted:
+            if self._incumbent is None or \
+                    res.latency_cycles < self._incumbent:
+                self._incumbent = res.latency_cycles
+
+    # -- execution ---------------------------------------------------------
+    def _tune_index(self, i: int, incumbent: Optional[float]):
+        from .tuner import tune_design
+        df, perm = self.designs[i]
+        desc, model, batch_model = self.built(self.designs[i])
+        return tune_design(self.wl, df, perm, hw=self.hw, cfg=self.cfg,
+                           use_mp_seed=self.use_mp_seed,
+                           divisors_only=self.divisors_only,
+                           desc=desc, model=model, batch_model=batch_model,
+                           abort_latency=incumbent
+                           if self.session.early_abort else None,
+                           abort_factor=self.session.abort_factor,
+                           probe_epochs=self.session.probe_epochs)
+
+    def _run_serial(self) -> List:
+        out = []
+        for i in range(len(self.designs)):
+            res = self._tune_index(i, self._incumbent)
+            self._observe(res)
+            out.append(res)
+        return out
+
+    def _run_pool(self) -> List:
+        n_designs = len(self.designs)
+        workers = self.session.max_workers or \
+            min(n_designs, max(1, (os.cpu_count() or 2)))
+        results: List = [None] * n_designs
+        use_procs = self.session.executor == "process"
+        if use_procs:
+            # spawn, not fork: callers routinely have jax (multithreaded)
+            # loaded, and forking a threaded process can deadlock.  Workers
+            # are reused across designs, so the spawn cost is per-pool.
+            ctx = multiprocessing.get_context("spawn")
+            def Executor(max_workers):
+                return cf.ProcessPoolExecutor(max_workers=max_workers,
+                                              mp_context=ctx)
+        else:
+            Executor = cf.ThreadPoolExecutor
+
+        def submit(ex, i):
+            if use_procs:
+                df, perm = self.designs[i]
+                payload = (self.wl, df, perm, self.hw, self.cfg,
+                           self.use_mp_seed, self.divisors_only,
+                           self._incumbent if self.session.early_abort
+                           else None,
+                           self.session.abort_factor,
+                           self.session.probe_epochs)
+                return ex.submit(_tune_payload, payload)
+            return ex.submit(self._tune_index, i, self._incumbent)
+
+        with Executor(max_workers=workers) as ex:
+            # lazy submission: later designs see the incumbent found so far
+            next_i = 0
+            pending: Dict = {}
+            while next_i < min(workers, n_designs):
+                pending[submit(ex, next_i)] = next_i
+                next_i += 1
+            while pending:
+                done, _ = cf.wait(list(pending),
+                                  return_when=cf.FIRST_COMPLETED)
+                for fut in done:
+                    i = pending.pop(fut)
+                    res = fut.result()
+                    self._observe(res)
+                    results[i] = res
+                    if next_i < n_designs:
+                        pending[submit(ex, next_i)] = next_i
+                        next_i += 1
+        return results
+
+    def run(self):
+        """Sweep all designs; returns a :class:`repro.core.tuner.TuneReport`."""
+        from .tuner import TuneReport
+        if self.session.executor == "serial":
+            results = self._run_serial()
+        elif self.session.executor in ("thread", "process"):
+            results = self._run_pool()
+        else:
+            raise ValueError(
+                f"unknown executor {self.session.executor!r}; "
+                "expected 'serial', 'thread' or 'process'")
+        self.report = TuneReport(workload=self.wl.name, results=results)
+        return self.report
+
+    # -- reporting ---------------------------------------------------------
+    def pareto(self) -> List[ParetoPoint]:
+        """The (latency, DSP, BRAM) frontier of the last ``run()``."""
+        if self.report is None:
+            raise RuntimeError("call run() first")
+        return [ParetoPoint(design=r.design.label(),
+                            latency_cycles=r.latency_cycles,
+                            throughput_gflops=r.throughput / 1e9,
+                            dsp=r.dsp, bram=r.bram, feasible=r.feasible,
+                            tiling=r.evo.best.as_dict())
+                for r in pareto_frontier(self.report.results)]

@@ -4,6 +4,17 @@ The engine is deliberately problem-agnostic: the systolic tiling space
 (``GenomeSpace``) and the TPU Pallas block space (``kernels.autotune``) plug
 in the same interface, which is the paper's Lesson 3 ("the methodology is
 general") made executable.
+
+Evaluation is *generation-batched*: each epoch the engine dedups the new
+population against the fitness cache and hands every uncached genome to
+``Problem.fitness_batch`` in one call.  Problems that can vectorize
+(``TilingProblem`` over :class:`~repro.core.perf_model.BatchPerformanceModel`,
+the TPU block-shape problem in ``kernels.autotune``) evaluate the whole
+generation with NumPy array ops; the default falls back to a scalar loop, so
+plain ``fitness``-only problems keep working unchanged.  The selection logic,
+RNG stream and eval accounting are identical to the scalar engine, so a fixed
+seed returns the same best genome either way (tested in
+``tests/test_batch_equivalence.py``).
 """
 
 from __future__ import annotations
@@ -11,7 +22,8 @@ from __future__ import annotations
 import dataclasses
 import random
 import time
-from typing import Callable, Generic, List, Optional, Sequence, Tuple, TypeVar
+from typing import (Callable, Generic, List, Optional, Sequence, Tuple,
+                    TypeVar)
 
 G = TypeVar("G")
 
@@ -34,6 +46,7 @@ class TraceEntry:
     evals: int
     seconds: float
     best_fitness: float
+    evals_per_sec: float = 0.0
 
 
 @dataclasses.dataclass
@@ -43,6 +56,11 @@ class EvoResult(Generic[G]):
     evals: int
     seconds: float
     trace: List[TraceEntry]
+    aborted: bool = False            # stopped early by a stop_fn
+
+    @property
+    def evals_per_sec(self) -> float:
+        return self.evals / max(1e-12, self.seconds)
 
 
 class Problem(Generic[G]):
@@ -60,35 +78,64 @@ class Problem(Generic[G]):
     def fitness(self, g: G) -> float:
         raise NotImplementedError
 
+    def fitness_batch(self, genomes: Sequence[G]) -> Sequence[float]:
+        """Evaluate a whole (deduplicated) generation at once.
+
+        Override to vectorize; the default delegates to scalar ``fitness``.
+        """
+        return [self.fitness(g) for g in genomes]
+
     def key(self, g: G) -> Tuple:
         raise NotImplementedError
 
 
 def evolve(problem: Problem[G], cfg: EvoConfig,
-           seeds: Sequence[G] = ()) -> EvoResult[G]:
+           seeds: Sequence[G] = (),
+           stop_fn: Optional[Callable[[int, float, G], bool]] = None
+           ) -> EvoResult[G]:
+    """Run the evolutionary search.
+
+    ``stop_fn(epoch, best_fitness, best_genome)`` is polled once per epoch;
+    returning True aborts the search (used by the sweep orchestrator to cut
+    off designs dominated by the incumbent across-design best).
+    """
     rng = random.Random(cfg.seed)
     t0 = time.perf_counter()
     evals = 0
     cache = {}
 
-    def fit(g: G) -> float:
+    def score(pop: List[G]) -> List[Tuple[float, int, G]]:
+        """Fitness-sorted (fitness, index, genome); batch-evaluates every
+        genome not already in the dedup cache."""
         nonlocal evals
-        k = problem.key(g)
-        if k in cache:
-            return cache[k]
-        evals += 1
-        f = problem.fitness(g)
-        cache[k] = f
-        return f
+        keys = [problem.key(g) for g in pop]
+        fresh: List[int] = []
+        seen = set()
+        for i, k in enumerate(keys):
+            if k not in cache and k not in seen:
+                seen.add(k)
+                fresh.append(i)
+        if fresh:
+            vals = problem.fitness_batch([pop[i] for i in fresh])
+            evals += len(fresh)
+            for i, v in zip(fresh, vals):
+                cache[keys[i]] = float(v)
+        return sorted(((cache[k], i, g)
+                       for i, (g, k) in enumerate(zip(pop, keys))),
+                      key=lambda t: -t[0])
+
+    def record():
+        dt = time.perf_counter() - t0
+        trace.append(TraceEntry(evals, dt, best_f, evals / max(1e-12, dt)))
 
     pop: List[G] = list(seeds)[:cfg.population]
     while len(pop) < cfg.population:
         pop.append(problem.sample(rng))
 
-    scored = sorted(((fit(g), i, g) for i, g in enumerate(pop)),
-                    key=lambda t: -t[0])
+    scored = score(pop)
     best_f, _, best = scored[0]
-    trace = [TraceEntry(evals, time.perf_counter() - t0, best_f)]
+    trace: List[TraceEntry] = []
+    record()
 
     def out_of_budget() -> bool:
         if cfg.time_budget_s is not None and \
@@ -98,8 +145,12 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
             return True
         return False
 
-    for _ in range(cfg.epochs):
+    aborted = False
+    for epoch in range(cfg.epochs):
         if out_of_budget():
+            break
+        if stop_fn is not None and stop_fn(epoch, best_f, best):
+            aborted = True
             break
         parents = [g for _, _, g in scored[:cfg.parents]]
         children: List[G] = [g for _, _, g in scored[:cfg.elites]]
@@ -111,26 +162,39 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
                 child = parents[rng.randrange(len(parents))]
             child = problem.mutate(child, rng, cfg.mutation_alpha)
             children.append(child)
-        scored = sorted(((fit(g), i, g) for i, g in enumerate(children)),
-                        key=lambda t: -t[0])
+        scored = score(children)
         if scored[0][0] > best_f:
             best_f, _, best = scored[0]
-        trace.append(TraceEntry(evals, time.perf_counter() - t0, best_f))
+        record()
 
     return EvoResult(best=best, best_fitness=best_f, evals=evals,
-                     seconds=time.perf_counter() - t0, trace=trace)
+                     seconds=time.perf_counter() - t0, trace=trace,
+                     aborted=aborted)
 
 
 # ---------------------------------------------------------------------- #
 # Adapter binding a GenomeSpace + PerformanceModel to the Problem interface
 # ---------------------------------------------------------------------- #
 class TilingProblem(Problem):
+    """Systolic tiling genomes over a performance model.
+
+    When no custom ``fitness_fn`` is given, whole generations are evaluated
+    through a :class:`~repro.core.perf_model.BatchPerformanceModel` built
+    from the same descriptor/hardware (pass ``batch=False`` to force the
+    scalar reference path, e.g. for benchmarking the speedup).
+    """
+
     def __init__(self, space, model, use_max_model: bool = False,
-                 fitness_fn: Optional[Callable] = None):
+                 fitness_fn: Optional[Callable] = None, batch: bool = True,
+                 batch_model=None):
         self.space = space
         self.model = model
         self.use_max_model = use_max_model
         self.fitness_fn = fitness_fn
+        self.batch_model = batch_model
+        if batch_model is None and batch and fitness_fn is None:
+            from .perf_model import BatchPerformanceModel
+            self.batch_model = BatchPerformanceModel(model.desc, model.hw)
 
     def sample(self, rng):
         return self.space.sample(rng)
@@ -145,6 +209,12 @@ class TilingProblem(Problem):
         if self.fitness_fn is not None:
             return self.fitness_fn(g)
         return self.model.fitness(g, use_max_model=self.use_max_model)
+
+    def fitness_batch(self, genomes):
+        if self.batch_model is None:
+            return [self.fitness(g) for g in genomes]
+        return self.batch_model.fitness(genomes,
+                                        use_max_model=self.use_max_model)
 
     def key(self, g):
         return g.key()

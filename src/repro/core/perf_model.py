@@ -29,11 +29,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
 
 from .descriptor import ArrayInfo, DesignDescriptor
 from .design_space import Genome
 from .hardware import HardwareProfile
+
+
+def _quartic(x):
+    """x**4 via squaring — identical IEEE ops for scalars and ndarrays, so
+    the scalar and batched fitness penalties agree bit-for-bit."""
+    x2 = x * x
+    return x2 * x2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,15 +273,265 @@ class PerformanceModel:
             else self.latency_cycles(g)
         penalty = 1.0
         if r.dsp > self.hw.dsp_available:
-            penalty *= (r.dsp / self.hw.dsp_available) ** 4
+            penalty *= _quartic(r.dsp / self.hw.dsp_available)
         if r.bram > self.hw.bram_available:
-            penalty *= (r.bram / self.hw.bram_available) ** 4
+            penalty *= _quartic(r.bram / self.hw.bram_available)
         if self.hw.lut_available and r.lut > self.hw.lut_available:
-            penalty *= (r.lut / self.hw.lut_available) ** 4
+            penalty *= _quartic(r.lut / self.hw.lut_available)
         return -lat * penalty
 
     def feasible(self, g: Genome) -> bool:
         return self.resources(g).fits(self.hw)
+
+
+# ---------------------------------------------------------------------- #
+# Batched evaluation engine
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class BatchEvaluation:
+    """Vectorized per-genome metrics for one population (all shape [B])."""
+
+    latency_cycles: np.ndarray     # f8
+    compute_cycles_per_tile: np.ndarray  # i8
+    dma_cycles_total: np.ndarray   # f8
+    num_tiles: np.ndarray          # i8
+    dsp: np.ndarray                # i8
+    bram: np.ndarray               # i8
+    lut: np.ndarray                # i8
+    feasible: np.ndarray           # bool
+    fitness: np.ndarray            # f8
+    off_chip_bytes: np.ndarray     # i8
+
+
+class BatchPerformanceModel:
+    """Population-at-once evaluation of :class:`PerformanceModel`.
+
+    Genomes are stacked into per-loop ``(n0, n1, n2)`` integer matrices and
+    every metric is computed with NumPy array ops.  The arithmetic mirrors
+    the scalar model operation-for-operation (same accumulation order, same
+    float divisions/ceils), so results match the scalar oracle bit-for-bit;
+    ``tests/test_batch_equivalence.py`` enforces this.
+
+    All structural facts that do not depend on the genome — band order,
+    per-array subscript-loop indices, carry-depth reload masks (``maxpos``
+    is permutation-only), banking masks, loop roles — are precomputed once
+    per descriptor in ``__init__`` instead of per genome.
+    """
+
+    def __init__(self, desc: DesignDescriptor, hw: HardwareProfile):
+        self.desc = desc
+        self.hw = hw
+        self.wl = desc.workload
+        names = list(self.wl.loop_names)
+        idx = {n: i for i, n in enumerate(names)}
+        self._names = names
+        # static loop-role index sets
+        self._band = [idx[l] for l in desc.permutation.order]
+        self._space = [idx[l] for l in desc.dataflow]
+        self._par = [idx[l] for l in self.wl.parallel_loops]
+        self._red = [idx[l] for l in self.wl.reduction_loops]
+        self._simd = idx[self.wl.simd_loop]
+        # static per-array structure (maxpos/flow sets depend only on the
+        # permutation, i.e. the descriptor — not the genome)
+        self._arrays = []
+        for a in desc.arrays:
+            self._arrays.append({
+                "name": a.name,
+                "is_output": a.is_output,
+                "dims": [[idx[l] for l in dim] for dim in a.dims],
+                "maxpos": a.maxpos,
+                "flow": [idx[l] for l in a.outer_flow_loops],
+                "needs_inbound_partials": a.needs_inbound_partials,
+                "bank_loops": [idx[l] for l in desc.dataflow
+                               if l in a.access_loops],
+            })
+
+    # -- genome stacking --------------------------------------------------
+    def stack(self, genomes: Sequence[Genome]
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stack genomes into (n0, n1, n2) int64 matrices of shape [B, L]."""
+        B, L = len(genomes), len(self._names)
+        n0 = np.empty((B, L), dtype=np.int64)
+        n1 = np.empty((B, L), dtype=np.int64)
+        n2 = np.empty((B, L), dtype=np.int64)
+        for b, g in enumerate(genomes):
+            for j, name in enumerate(self._names):
+                n0[b, j], n1[b, j], n2[b, j] = g.triples[name]
+        return n0, n1, n2
+
+    # -- vector helpers (operate on stacked matrices) ----------------------
+    def _transfer(self, nbytes: np.ndarray) -> np.ndarray:
+        return self.hw.dma_overhead_cycles + np.ceil(
+            nbytes / self.hw.dram_bus_bytes)
+
+    def _tile_bytes(self, arr: dict, t1: np.ndarray) -> np.ndarray:
+        elems = np.ones(t1.shape[0], dtype=np.int64)
+        for dim in arr["dims"]:
+            size = t1[:, dim].sum(axis=1) - (len(dim) - 1)
+            elems = elems * size
+        return elems * self.desc.dtype_bytes
+
+    def _prefix_products(self, n0: np.ndarray) -> np.ndarray:
+        """P_p for p = 0..len(band), shape [B, P+1]."""
+        B = n0.shape[0]
+        out = np.empty((B, len(self._band) + 1), dtype=np.int64)
+        out[:, 0] = 1
+        for p, j in enumerate(self._band, start=1):
+            out[:, p] = out[:, p - 1] * n0[:, j]
+        return out
+
+    def _events(self, arr: dict, n0: np.ndarray, prefix: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """(load_events, store_events), both int64 [B]."""
+        episodes = prefix[:, arr["maxpos"]]
+        if not arr["is_output"]:
+            return episodes, np.zeros_like(episodes)
+        if not arr["flow"]:
+            return np.zeros_like(episodes), episodes
+        fresh = episodes // np.prod(n0[:, arr["flow"]], axis=1)
+        return episodes - fresh, episodes
+
+    def _compute_cycles_per_tile(self, n1: np.ndarray, n2: np.ndarray,
+                                 t1: np.ndarray) -> np.ndarray:
+        pes = np.prod(n1[:, self._space], axis=1) if self._space else \
+            np.ones(n1.shape[0], dtype=np.int64)
+        simd = n2[:, self._simd]
+        par = np.prod(t1[:, self._par], axis=1) if self._par else \
+            np.ones(n1.shape[0], dtype=np.int64)
+        par_per_pe = np.maximum(1, par // np.maximum(1, pes))
+        red = np.ones(n1.shape[0], dtype=np.int64)
+        for j in self._red:
+            t = t1[:, j]
+            if j == self._simd:
+                t = np.maximum(1, t // simd)
+            red = red * t
+        ii = np.where(red > 1,
+                      np.maximum(par_per_pe, self.hw.mac_pipeline_depth),
+                      par_per_pe)
+        fill_drain = n1[:, self._space].sum(axis=1) + self.hw.mac_pipeline_depth
+        return red * ii + fill_drain
+
+    # -- public metrics ----------------------------------------------------
+    def evaluate(self, genomes: Sequence[Genome],
+                 use_max_model: bool = False) -> BatchEvaluation:
+        n0, n1, n2 = self.stack(genomes)
+        t1 = n1 * n2
+        B = n0.shape[0]
+        hw = self.hw
+
+        tb = {a["name"]: self._tile_bytes(a, t1) for a in self._arrays}
+        xfer = {name: self._transfer(b) for name, b in tb.items()}
+        prefix = self._prefix_products(n0)
+        events = {a["name"]: self._events(a, n0, prefix)
+                  for a in self._arrays}
+
+        c_tile = self._compute_cycles_per_tile(n1, n2, t1)
+        c_tile_f = c_tile.astype(np.float64)
+
+        # prologue / epilogue (array order matches the scalar model)
+        prologue = np.zeros(B)
+        epilogue = np.zeros(B)
+        for a in self._arrays:
+            if a["is_output"]:
+                epilogue += xfer[a["name"]]
+            else:
+                prologue += xfer[a["name"]]
+
+        # steady state grouped by odometer carry depth
+        steady = np.zeros(B)
+        for p in range(1, len(self._band) + 1):
+            n_p = prefix[:, p] - prefix[:, p - 1]
+            dma = np.zeros(B)
+            for a in self._arrays:
+                if a["maxpos"] < p:
+                    continue
+                dma += xfer[a["name"]]
+                if a["is_output"] and a["flow"]:
+                    load, store = events[a["name"]]
+                    dma += (load / np.maximum(1, store)) * xfer[a["name"]]
+            step = np.maximum(c_tile_f, dma)
+            steady += np.where(n_p > 0, n_p * step, 0.0)
+        steady = steady + c_tile_f
+        latency = (prologue + steady) + epilogue
+
+        # total DMA cycles + off-chip traffic (array order preserved)
+        dma_total = np.zeros(B)
+        off_chip = np.zeros(B, dtype=np.int64)
+        for a in self._arrays:
+            load, store = events[a["name"]]
+            ev = load + store
+            dma_total += ev * xfer[a["name"]]
+            off_chip += ev * tb[a["name"]]
+
+        # resources
+        pes = np.prod(n1[:, self._space], axis=1) if self._space else \
+            np.ones(B, dtype=np.int64)
+        simd = n2[:, self._simd]
+        lanes = pes * simd
+        dsp = lanes * hw.dsp_per_lane
+        port_brams = np.ceil(simd * self.desc.dtype_bytes * 8
+                             / hw.bram_port_bits).astype(np.int64)
+        total_bram = np.zeros(B, dtype=np.int64)
+        for a in self._arrays:
+            banks = np.prod(n1[:, a["bank_loops"]], axis=1) \
+                if a["bank_loops"] else np.ones(B, dtype=np.int64)
+            banks = np.maximum(1, banks)
+            bank_bytes = np.ceil(tb[a["name"]] / banks)
+            per_bank = np.maximum(
+                port_brams,
+                np.ceil(2 * bank_bytes / hw.bram_bytes).astype(np.int64))
+            n = 2 * banks * per_bank
+            if a["needs_inbound_partials"]:
+                n = n * 2
+            total_bram += n
+        acc_elems = np.prod(t1[:, self._par], axis=1) if self._par else \
+            np.ones(B, dtype=np.int64)
+        acc_elems = np.ceil(acc_elems / np.maximum(1, pes)).astype(np.int64)
+        acc_bytes = acc_elems * self.desc.dtype_bytes
+        pe_bram = np.where(
+            acc_bytes <= 1024, 0,
+            pes * np.ceil(2 * acc_bytes / hw.bram_bytes).astype(np.int64))
+        total_bram = total_bram + pe_bram
+        lut = pes * hw.lut_per_pe + lanes * hw.lut_per_lane
+
+        feasible = (dsp <= hw.dsp_available) & (total_bram <= hw.bram_available)
+        if hw.lut_available:
+            feasible &= lut <= hw.lut_available
+
+        # fitness: negative latency with the smooth resource-overuse penalty
+        num_tiles = prefix[:, -1]
+        if use_max_model:
+            lat = np.maximum(c_tile_f * num_tiles.astype(np.float64),
+                             dma_total)
+        else:
+            lat = latency
+        penalty = np.where(dsp > hw.dsp_available,
+                           _quartic(dsp / hw.dsp_available), 1.0)
+        penalty = penalty * np.where(
+            total_bram > hw.bram_available,
+            _quartic(total_bram / hw.bram_available), 1.0)
+        if hw.lut_available:
+            penalty = penalty * np.where(
+                lut > hw.lut_available,
+                _quartic(lut / hw.lut_available), 1.0)
+        fitness = -lat * penalty
+
+        return BatchEvaluation(
+            latency_cycles=latency, compute_cycles_per_tile=c_tile,
+            dma_cycles_total=dma_total, num_tiles=num_tiles,
+            dsp=dsp, bram=total_bram, lut=lut, feasible=feasible,
+            fitness=fitness, off_chip_bytes=off_chip)
+
+    def latency_cycles(self, genomes: Sequence[Genome]) -> np.ndarray:
+        return self.evaluate(genomes).latency_cycles
+
+    def fitness(self, genomes: Sequence[Genome],
+                use_max_model: bool = False) -> np.ndarray:
+        return self.evaluate(genomes, use_max_model=use_max_model).fitness
+
+    def throughput(self, genomes: Sequence[Genome]) -> np.ndarray:
+        secs = self.latency_cycles(genomes) / self.hw.freq_hz
+        return self.wl.flops() / secs
 
 
 # ---------------------------------------------------------------------- #

@@ -40,6 +40,7 @@ class DesignResult:
     bram: int
     feasible: bool
     seconds: float
+    aborted: bool = False          # search cut off as dominated (engine)
 
     def summary(self) -> Dict:
         return {
@@ -51,6 +52,7 @@ class DesignResult:
             "feasible": self.feasible,
             "evals": self.evo.evals,
             "seconds": round(self.seconds, 3),
+            "aborted": self.aborted,
             "tiling": self.evo.best.as_dict(),
         }
 
@@ -72,12 +74,25 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
                 cfg: Optional[EvoConfig] = None,
                 use_mp_seed: bool = True,
                 mp_objective: str = "obj3_comm_comp",
-                divisors_only: bool = False) -> DesignResult:
-    """Tune the tiling of a single (dataflow, permutation) design."""
+                divisors_only: bool = False,
+                desc: Optional[DesignDescriptor] = None,
+                model: Optional[PerformanceModel] = None,
+                batch_model=None,
+                abort_latency: Optional[float] = None,
+                abort_factor: float = 3.0,
+                probe_epochs: int = 8) -> DesignResult:
+    """Tune the tiling of a single (dataflow, permutation) design.
+
+    ``desc``/``model``/``batch_model`` may be supplied prebuilt (the engine
+    caches them per design).  ``abort_latency`` is the sweep incumbent: once
+    ``probe_epochs`` have run, the search is cut off if its best genome's
+    *raw* latency (penalty-free, so an infeasible-but-promising probe never
+    triggers it) is still worse than ``abort_factor x`` the incumbent.
+    """
     t0 = time.perf_counter()
     cfg = cfg or EvoConfig()
-    desc = build_descriptor(wl, dataflow, perm)
-    model = PerformanceModel(desc, hw)
+    desc = desc or build_descriptor(wl, dataflow, perm)
+    model = model or PerformanceModel(desc, hw)
     space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
 
     seeds: List[Genome] = []
@@ -86,7 +101,14 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
             space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
             seed=cfg.seed)
 
-    evo = evolve(TilingProblem(space, model), cfg, seeds=seeds)
+    stop_fn = None
+    if abort_latency is not None:
+        def stop_fn(epoch: int, best_f: float, best_g: Genome) -> bool:
+            return epoch >= probe_epochs and \
+                model.latency_cycles(best_g) > abort_factor * abort_latency
+
+    evo = evolve(TilingProblem(space, model, batch_model=batch_model),
+                 cfg, seeds=seeds, stop_fn=stop_fn)
     g = evo.best
     rep = model.latency(g)
     res = model.resources(g)
@@ -98,6 +120,7 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
         dsp=res.dsp, bram=res.bram,
         feasible=model.feasible(g),
         seconds=time.perf_counter() - t0,
+        aborted=evo.aborted,
     )
 
 
@@ -105,16 +128,21 @@ def tune_workload(wl: Workload, hw: HardwareProfile = U250,
                   cfg: Optional[EvoConfig] = None,
                   use_mp_seed: bool = True,
                   time_budget_s: Optional[float] = None,
-                  divisors_only: bool = False) -> TuneReport:
-    """Run the full Odyssey flow over the pruned design space."""
-    designs = enumerate_designs(wl)
-    cfg = cfg or EvoConfig()
-    if time_budget_s is not None:
-        per = time_budget_s / len(designs)
-        cfg = EvoConfig(**{**cfg.__dict__, "time_budget_s": per})
-    results = []
-    for df, perm in designs:
-        results.append(tune_design(wl, df, perm, hw=hw, cfg=cfg,
-                                   use_mp_seed=use_mp_seed,
-                                   divisors_only=divisors_only))
-    return TuneReport(workload=wl.name, results=results)
+                  divisors_only: bool = False,
+                  executor: str = "serial",
+                  max_workers: Optional[int] = None,
+                  early_abort: bool = False) -> TuneReport:
+    """Run the full Odyssey flow over the pruned design space.
+
+    Thin wrapper over :class:`repro.core.engine.SearchSession`.  Defaults
+    (serial, no early-abort) reproduce the classic strictly-sequential sweep
+    exactly; pass ``executor="process"``/``"thread"`` and/or
+    ``early_abort=True`` to opt into the parallel engine.
+    """
+    from .engine import SearchSession, SessionConfig
+    session = SearchSession(
+        wl, hw=hw, cfg=cfg, use_mp_seed=use_mp_seed,
+        time_budget_s=time_budget_s, divisors_only=divisors_only,
+        session=SessionConfig(executor=executor, max_workers=max_workers,
+                              early_abort=early_abort))
+    return session.run()

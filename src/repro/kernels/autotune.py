@@ -16,10 +16,13 @@ import dataclasses
 import functools
 import math
 import random
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.evolutionary import EvoConfig, Problem, evolve
 from repro.core.hardware import TPU_V5E, HardwareProfile
+from repro.core.perf_model import _quartic
 
 from .matmul import MatmulConfig
 
@@ -81,12 +84,49 @@ class TpuMatmulModel:
         lat = self.latency_s(g)
         v = self.vmem_bytes(g)
         if v > self.hw.vmem_bytes:
-            lat *= (v / self.hw.vmem_bytes) ** 4
+            lat *= _quartic(v / self.hw.vmem_bytes)
         return -lat
 
     def mfu(self, g: BlockGenome) -> float:
         useful = 2 * self.M * self.N * self.K
         return useful / self.hw.flops_peak / self.latency_s(g)
+
+    # -- batched evaluation (same interface as BatchPerformanceModel) ------
+    def fitness_batch(self, genomes: Sequence[BlockGenome]) -> np.ndarray:
+        """Vectorized ``fitness`` over a whole population.
+
+        Mirrors the scalar arithmetic operation-for-operation (same float
+        divisions and accumulation order), so it matches scalar ``fitness``
+        bit-for-bit — the same contract the FPGA-side batch model honors.
+        """
+        bm = np.array([g[0] for g in genomes], dtype=np.int64)
+        bk = np.array([g[1] for g in genomes], dtype=np.int64)
+        bn = np.array([g[2] for g in genomes], dtype=np.int64)
+        k_inner = np.array([g[3] for g in genomes], dtype=bool)
+        db = self.dtype_bytes
+
+        gm = np.ceil(self.M / bm)
+        gn = np.ceil(self.N / bn)
+        gk = np.ceil(self.K / bk)
+
+        def up(x, m):
+            return ((x + m - 1) // m) * m
+
+        tc = (2 * up(bm, 8) * up(bk, 128) * up(bn, 128)) / self.hw.flops_peak
+        bytes_in = (bm * bk + bk * bn) * db
+        bytes_out = np.where(k_inner, bm * bn * db / gk,
+                             np.float64(2 * bm * bn * 4))
+        td = (bytes_in + bytes_out) / self.hw.hbm_bw \
+            + self.hw.dma_overhead_cycles / self.hw.freq_hz
+
+        n_blocks = gm * gn * gk
+        epilogue = (bm * bn * db) / self.hw.hbm_bw
+        lat = td + tc + (n_blocks - 1) * np.maximum(tc, td) + epilogue
+
+        vmem = (2 * (bm * bk + bk * bn) * db + bm * bn * 4 + bm * bn * db)
+        lat = np.where(vmem > self.hw.vmem_bytes,
+                       lat * _quartic(vmem / self.hw.vmem_bytes), lat)
+        return -lat
 
 
 class TpuMatmulProblem(Problem):
@@ -125,6 +165,9 @@ class TpuMatmulProblem(Problem):
 
     def fitness(self, g: BlockGenome) -> float:
         return self.model.fitness(g)
+
+    def fitness_batch(self, genomes: Sequence[BlockGenome]) -> np.ndarray:
+        return self.model.fitness_batch(genomes)
 
     def key(self, g: BlockGenome):
         return g

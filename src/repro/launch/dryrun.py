@@ -167,6 +167,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str):
 
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):  # pre-0.4.30 jax returns [dict]
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo = compiled.as_text()
     # trip-count-aware costs (XLA's cost_analysis counts scan bodies once)
     summary = hlo_costs.analyze(hlo)

@@ -1,0 +1,118 @@
+"""Batched evaluation engine vs. the scalar reference oracle.
+
+The batched models are required to match the scalar ones *bit-for-bit* —
+same IEEE operations in the same order — so the vectorized search explores
+exactly the same fitness landscape.  These tests sample >= 100 random
+genomes per (workload, design) and compare every metric with ``==``, plus
+end-to-end: ``evolve`` with a fixed seed returns the identical best genome
+through the scalar and the batched evaluation paths.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchPerformanceModel, EvoConfig, GenomeSpace,
+                        PerformanceModel, TilingProblem, U250,
+                        build_descriptor, cnn_validation, conv2d, evolve,
+                        matmul, mm_1024, pruned_permutations)
+
+
+def _tpu_problem():
+    """repro.kernels pulls in jax (optional dep); skip the TPU-side
+    equivalence tests when it is absent."""
+    pytest.importorskip("jax")
+    from repro.kernels.autotune import TpuMatmulModel, TpuMatmulProblem
+    return TpuMatmulModel, TpuMatmulProblem
+
+
+def _designs():
+    out = []
+    for wl, df in [(mm_1024(), ("i", "j")),
+                   (matmul(64, 64, 64), ("i", "k")),
+                   (matmul(130, 70, 50), ("j",)),
+                   (cnn_validation(), ("o", "h")),
+                   (conv2d(16, 16, 14, 14, 3, 3), ("i",))]:
+        for perm in pruned_permutations(wl):
+            out.append((wl, df, perm))
+    return out
+
+
+@pytest.mark.parametrize("wl,df,perm", _designs(),
+                         ids=lambda v: getattr(v, "name", None)
+                         or getattr(v, "label", lambda: str(v))())
+def test_batch_matches_scalar_bitwise(wl, df, perm):
+    desc = build_descriptor(wl, df, perm)
+    scalar = PerformanceModel(desc, U250)
+    batch = BatchPerformanceModel(desc, U250)
+    space = GenomeSpace(wl, df)
+    rng = random.Random(0)
+    genomes = [space.sample(rng) for _ in range(110)]
+
+    ev = batch.evaluate(genomes)
+    ev_max = batch.evaluate(genomes, use_max_model=True)
+    for i, g in enumerate(genomes):
+        rep = scalar.latency(g)
+        res = scalar.resources(g)
+        assert ev.latency_cycles[i] == rep.cycles
+        assert ev.compute_cycles_per_tile[i] == rep.compute_cycles_per_tile
+        assert ev.dma_cycles_total[i] == rep.dma_cycles_total
+        assert ev.num_tiles[i] == rep.num_tiles
+        assert ev.dsp[i] == res.dsp
+        assert ev.bram[i] == res.bram
+        assert ev.lut[i] == res.lut
+        assert bool(ev.feasible[i]) == scalar.feasible(g)
+        assert ev.fitness[i] == scalar.fitness(g)
+        assert ev_max.fitness[i] == scalar.fitness(g, use_max_model=True)
+        assert ev.off_chip_bytes[i] == scalar.off_chip_bytes(g)
+
+
+def test_evolve_identical_through_batch_path():
+    """Fixed seed => the generation-batched engine visits the same genomes
+    and returns the identical best, fitness and eval count as the scalar
+    loop."""
+    wl = matmul(256, 256, 256)
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {"k"}][0]
+    desc = build_descriptor(wl, ("i", "j"), perm)
+    model = PerformanceModel(desc, U250)
+    space = GenomeSpace(wl, ("i", "j"))
+    cfg = EvoConfig(epochs=25, population=32, seed=3)
+
+    scalar_res = evolve(TilingProblem(space, model, batch=False), cfg)
+    batch_res = evolve(TilingProblem(space, model, batch=True), cfg)
+
+    assert batch_res.best.key() == scalar_res.best.key()
+    assert batch_res.best_fitness == scalar_res.best_fitness
+    assert batch_res.evals == scalar_res.evals
+    assert [t.best_fitness for t in batch_res.trace] == \
+        [t.best_fitness for t in scalar_res.trace]
+    assert batch_res.trace[-1].evals_per_sec > 0
+
+
+def test_tpu_block_model_batch_matches_scalar():
+    TpuMatmulModel, TpuMatmulProblem = _tpu_problem()
+    model = TpuMatmulModel(M=1024, N=1024, K=4096)
+    problem = TpuMatmulProblem(model)
+    rng = random.Random(0)
+    genomes = [problem.sample(rng) for _ in range(200)]
+    batch = np.asarray(problem.fitness_batch(genomes))
+    for i, g in enumerate(genomes):
+        assert batch[i] == model.fitness(g)
+
+
+def test_tpu_autotune_identical_through_batch_path():
+    TpuMatmulModel, TpuMatmulProblem = _tpu_problem()
+    model = TpuMatmulModel(M=512, N=512, K=512)
+
+    class ScalarOnly(TpuMatmulProblem):
+        def fitness_batch(self, genomes):
+            return [self.fitness(g) for g in genomes]
+
+    cfg = EvoConfig(population=32, parents=8, epochs=20, seed=0,
+                    max_evals=600)
+    a = evolve(TpuMatmulProblem(model), cfg)
+    b = evolve(ScalarOnly(model), cfg)
+    assert a.best == b.best
+    assert a.best_fitness == b.best_fitness
+    assert a.evals == b.evals

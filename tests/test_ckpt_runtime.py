@@ -3,10 +3,12 @@ restart supervision, elastic mesh planning, data pipeline."""
 
 import os
 
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import (AsyncCheckpointer, latest_checkpoint,
                         restore_checkpoint, save_checkpoint)

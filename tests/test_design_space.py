@@ -64,3 +64,32 @@ def test_theorem_3_1_dominance(df):
             PerformanceModel(build_descriptor(wl, df, p), U250
                              ).latency_cycles(g) for p in everything)
         assert best_pruned <= best_all * (1 + 1e-9), (trial, g.as_dict())
+
+
+def test_legalize_clamps_overbound_tiles_with_level2():
+    """Regression: the old clamp ran `ceil(bound/n2)` at most once, so an
+    over-bound tile with n2 > 1 could stay over-bound and collapse to the
+    n1=1 fallback.  The fixed clamp floors n1 so T1 = n1*n2 <= bound
+    whenever n2 alone fits."""
+    from repro.core import Genome
+
+    wl = matmul(10, 10, 10)
+    space = GenomeSpace(wl, ("i", "j"))
+    # i is a space loop with level-2: n1*n2 = 3*4 = 12 > bound 10
+    g = space.legalize(Genome({"i": (1, 3, 4), "j": (1, 2, 1),
+                               "k": (1, 10, 1)}))
+    n0, n1, n2 = g.triples["i"]
+    assert n1 * n2 <= 10          # clamped within the original bound
+    assert n2 == 4                # level-2 factor preserved
+    assert n1 == 2                # floor(10/4), not ceil -> 3*4=12
+    assert n0 * n1 * n2 >= 10     # still covers the domain
+
+    # n2 alone over the bound falls back to shrinking n2
+    g2 = space.legalize(Genome({"i": (1, 1, 16), "j": (1, 2, 1),
+                                "k": (1, 10, 1)}))
+    n0, n1, n2 = g2.triples["i"]
+    assert n1 * n2 <= 10 and n1 == 1
+
+    # legalize is idempotent on already-legal genomes
+    g3 = space.legalize(g)
+    assert g3.triples == g.triples

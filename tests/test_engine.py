@@ -1,0 +1,95 @@
+"""SearchSession: parallel design sweep, early abort, Pareto frontier."""
+
+import pytest
+
+from repro.core import (EvoConfig, SearchSession, SessionConfig,
+                        mm_validation, matmul, pareto_frontier,
+                        tune_workload)
+
+CFG = EvoConfig(epochs=6, population=16, seed=0)
+
+
+def _latencies(report):
+    return [(r.design.label(), r.latency_cycles) for r in report.results]
+
+
+def test_serial_session_matches_tune_workload():
+    wl = mm_validation()
+    via_wrapper = tune_workload(wl, cfg=CFG)
+    session = SearchSession(wl, cfg=CFG,
+                            session=SessionConfig(executor="serial",
+                                                  early_abort=False))
+    via_session = session.run()
+    assert _latencies(via_wrapper) == _latencies(via_session)
+    assert via_wrapper.best.latency_cycles == via_session.best.latency_cycles
+
+
+@pytest.mark.parametrize("executor", ["thread", "process"])
+def test_parallel_sweep_matches_serial(executor):
+    """Each design's search is independent and seeded, so fanning the sweep
+    over a pool must reproduce the serial per-design results exactly."""
+    wl = mm_validation()
+    serial = SearchSession(wl, cfg=CFG,
+                           session=SessionConfig(executor="serial",
+                                                 early_abort=False)).run()
+    parallel = SearchSession(wl, cfg=CFG,
+                             session=SessionConfig(executor=executor,
+                                                   max_workers=4,
+                                                   early_abort=False)).run()
+    assert _latencies(serial) == _latencies(parallel)
+
+
+def test_early_abort_keeps_winner_and_saves_evals():
+    wl = matmul(256, 256, 256)
+    cfg = EvoConfig(epochs=20, population=24, seed=0)
+    full = SearchSession(wl, cfg=cfg,
+                         session=SessionConfig(executor="serial",
+                                               early_abort=False)).run()
+    fast = SearchSession(wl, cfg=cfg,
+                         session=SessionConfig(executor="serial",
+                                               early_abort=True,
+                                               abort_factor=2.0,
+                                               probe_epochs=3)).run()
+    # dominated designs were cut off...
+    assert sum(r.aborted for r in fast.results) > 0
+    assert sum(r.evo.evals for r in fast.results) < \
+        sum(r.evo.evals for r in full.results)
+    # ...but the winner is untouched (abort is conservative)
+    assert fast.best.latency_cycles == full.best.latency_cycles
+    assert not fast.best.aborted
+
+
+def test_pareto_frontier_is_nondominated():
+    wl = mm_validation()
+    session = SearchSession(wl, cfg=CFG,
+                            session=SessionConfig(executor="serial",
+                                                  early_abort=False))
+    report = session.run()
+    frontier = pareto_frontier(report.results)
+    assert frontier
+    # the latency winner is always on the frontier
+    assert report.best in frontier
+    # no frontier point dominates another
+    for a in frontier:
+        for b in frontier:
+            if a is b:
+                continue
+            assert not (a.latency_cycles <= b.latency_cycles
+                        and a.dsp <= b.dsp and a.bram <= b.bram
+                        and (a.latency_cycles < b.latency_cycles
+                             or a.dsp < b.dsp or a.bram < b.bram))
+    # and the session exposes it as ParetoPoints
+    points = session.pareto()
+    assert len(points) == len(frontier)
+    assert {p.design for p in points} == \
+        {r.design.label() for r in frontier}
+
+
+def test_descriptor_model_cache_reused():
+    wl = mm_validation()
+    session = SearchSession(wl, cfg=CFG,
+                            session=SessionConfig(executor="serial",
+                                                  early_abort=False))
+    d1 = session.built(session.designs[0])
+    d2 = session.built(session.designs[0])
+    assert d1[0] is d2[0] and d1[1] is d2[1] and d1[2] is d2[2]

@@ -1,11 +1,14 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret
 mode executes the Pallas kernel bodies on CPU)."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import (FlashConfig, MatmulConfig, SSDConfig,
                            flash_attention, matmul, ref, ssd_chunk)

@@ -2,9 +2,11 @@
 
 import dataclasses
 
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import ARCH_IDS, ARCHS, get_smoke_config, input_specs
 from repro.models import SHAPES, build_model, shapes_for

@@ -3,13 +3,14 @@
 import math
 import random
 
-import hypothesis
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (Genome, GenomeSpace, U250, PerformanceModel,
                         build_descriptor, conv2d, matmul,
                         pruned_permutations)
-from repro.train.optimizer import AdamWConfig, lr_at
 
 SET = settings(max_examples=30, deadline=None)
 
@@ -122,7 +123,9 @@ def test_conv_descriptor_tile_windows(i, o, h, w, p, q):
 @given(st.integers(0, 20000))
 @SET
 def test_lr_schedule_bounds(step):
+    pytest.importorskip("jax")
     import jax.numpy as jnp
+    from repro.train.optimizer import AdamWConfig, lr_at
     cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000)
     lr = float(lr_at(cfg, jnp.asarray(step)))
     # f32 arithmetic: one ulp of slack at the warmup boundary

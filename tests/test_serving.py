@@ -2,6 +2,9 @@
 
 import dataclasses
 
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

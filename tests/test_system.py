@@ -5,6 +5,9 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -3,6 +3,9 @@ round-trips, optimizer semantics."""
 
 import dataclasses
 
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
 import jax
 import jax.numpy as jnp
 import numpy as np
