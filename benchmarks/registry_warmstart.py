@@ -1,0 +1,117 @@
+"""Registry warm-start benchmark: cold vs exact-hit vs transfer-seeded.
+
+Quantifies what the design registry (DESIGN.md §9) buys on the paper's
+MM case study:
+
+  * **cold**   — full sweep of mm 1024^3, no cache (the PR-1 baseline);
+  * **exact**  — the same workload again through the registry: a pure
+    lookup, zero evolutionary evaluations;
+  * **transfer** — the neighboring mm 1000x1024x1024, warm-started from
+    the cached 1024^3 winner; reported as evaluations and wall-clock to
+    reach 90%-of-best quality vs the same search started cold.  Both
+    arms run without MP seeding to isolate the transfer effect.
+
+Artifact: ``experiments/bench/registry_warmstart.json``.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.core import (EvoConfig, Permutation, SearchSession, SessionConfig,
+                        U250, matmul, tune_design)
+from repro.registry import (RegistryStore, transfer_seeds,
+                            workload_fingerprint)
+from repro.registry.transfer import design_key
+
+from .common import emit, save_json
+
+SWEEP_CFG = dict(epochs=30, population=32, parents=8, seed=0)
+ARM_CFG = dict(epochs=40, population=32, parents=8, seed=5)
+QUALITY = 0.9
+
+
+def _evals_to_quality(trace, target_fitness):
+    for entry in trace:
+        if entry.best_fitness >= target_fitness:
+            return entry.evals, entry.seconds
+    return float("inf"), float("inf")
+
+
+def bench_registry_warmstart() -> None:
+    store = RegistryStore(tempfile.mkdtemp(prefix="repro-registry-bench-"))
+    wl1 = matmul(1024, 1024, 1024)
+
+    # cold sweep (populates the registry)
+    t0 = time.perf_counter()
+    cold_report = SearchSession(
+        wl1, cfg=EvoConfig(**SWEEP_CFG), registry=store,
+        session=SessionConfig(executor="serial")).run()
+    cold_s = time.perf_counter() - t0
+    cold_evals = sum(r.evo.evals for r in cold_report.results)
+    emit("registry_cold_sweep", cold_s * 1e6,
+         f"evals={cold_evals} best={cold_report.best.latency_cycles:.0f}")
+
+    # exact hit: same workload, new session -> pure lookup
+    t0 = time.perf_counter()
+    hit_report = SearchSession(
+        wl1, cfg=EvoConfig(**SWEEP_CFG), registry=store,
+        session=SessionConfig(executor="serial")).run()
+    hit_s = time.perf_counter() - t0
+    hit_evals = sum(r.evo.evals for r in hit_report.results)
+    assert hit_report.from_cache and hit_evals == 0
+    emit("registry_exact_hit", hit_s * 1e6,
+         f"evals=0 speedup={cold_s / max(hit_s, 1e-9):.0f}x")
+
+    # transfer: neighbor workload, warm-started from the cached winner
+    wl2 = matmul(1000, 1024, 1024)
+    fp2 = workload_fingerprint(wl2, U250)
+    seeds = transfer_seeds(store, fp2, wl2)
+    best = store.get(workload_fingerprint(wl1, U250)).best
+    df = tuple(best["dataflow"])
+    perm = Permutation(outer=tuple(best["perm_outer"]),
+                       inner=tuple(best["perm_inner"]))
+    extra = tuple(seeds.get(design_key(df, perm), ()))
+    assert extra, "transfer must seed the cached winner's design"
+
+    cfg = EvoConfig(**ARM_CFG)
+    cold = tune_design(wl2, df, perm, cfg=cfg, use_mp_seed=False)
+    warm = tune_design(wl2, df, perm, cfg=cfg, use_mp_seed=False,
+                       extra_seeds=extra)
+    best_f = max(cold.evo.best_fitness, warm.evo.best_fitness)
+    target = best_f / QUALITY                  # fitness = -latency
+    cold_e90, cold_t90 = _evals_to_quality(cold.evo.trace, target)
+    warm_e90, warm_t90 = _evals_to_quality(warm.evo.trace, target)
+    ratio = warm_e90 / cold_e90 if cold_e90 != float("inf") else float("nan")
+    emit("registry_transfer_evals_to_90", warm_t90 * 1e6,
+         f"warm={warm_e90} cold={cold_e90} ratio={ratio:.2f}")
+    assert warm_e90 <= 0.5 * cold_e90, \
+        f"transfer warm start must halve evals-to-90% " \
+        f"(warm={warm_e90}, cold={cold_e90})"
+
+    save_json("registry_warmstart", {
+        "quality_target": QUALITY,
+        "sweep_cfg": SWEEP_CFG,
+        "arm_cfg": ARM_CFG,
+        "cold_sweep": {"workload": wl1.name, "seconds": cold_s,
+                       "evals": cold_evals,
+                       "best_latency_cycles": cold_report.best.latency_cycles},
+        "exact_hit": {"workload": wl1.name, "seconds": hit_s, "evals": 0,
+                      "speedup_vs_cold": cold_s / max(hit_s, 1e-9),
+                      "best_latency_cycles": hit_report.best.latency_cycles},
+        "transfer": {
+            "workload": wl2.name,
+            "seeded_design": f"[{','.join(df)}] {perm.label()}",
+            "n_seeds": len(extra),
+            "cold": {"evals_to_90": cold_e90, "seconds_to_90": cold_t90,
+                     "best_fitness": cold.evo.best_fitness},
+            "warm": {"evals_to_90": warm_e90, "seconds_to_90": warm_t90,
+                     "best_fitness": warm.evo.best_fitness},
+            "evals_ratio": ratio,
+        },
+    })
+
+
+if __name__ == "__main__":
+    bench_registry_warmstart()

@@ -23,10 +23,12 @@ def main() -> None:
                     help="skip the multi-minute network studies")
     args = ap.parse_args()
 
-    from . import paper_mm, paper_cnn, roofline, search_speed
+    from . import (paper_mm, paper_cnn, registry_warmstart, roofline,
+                   search_speed)
 
     benches = [
         ("search_speed", search_speed.bench_search_speed),
+        ("registry_warmstart", registry_warmstart.bench_registry_warmstart),
         ("table2", paper_mm.bench_table2),
         ("fig1_fig15", paper_mm.bench_fig1_fig15),
         ("table3", paper_mm.bench_table3),

@@ -29,6 +29,8 @@ import math
 import random
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .workloads import Workload
 
 Triple = Tuple[int, int, int]
@@ -96,6 +98,14 @@ def all_permutations(wl: Workload) -> List[Permutation]:
 # ---------------------------------------------------------------------- #
 def _pow2_floor(x: int) -> int:
     return 1 << max(0, x.bit_length() - 1)
+
+
+def _pow2_floor_arr(x: np.ndarray) -> np.ndarray:
+    """Vectorized ``_pow2_floor`` for positive int64 arrays."""
+    x = x.astype(np.uint64)
+    for s in (1, 2, 4, 8, 16, 32):
+        x |= x >> np.uint64(s)
+    return ((x >> np.uint64(1)) + np.uint64(1)).astype(np.int64)
 
 
 def divisors(n: int) -> List[int]:
@@ -212,6 +222,51 @@ class GenomeSpace:
         n2 = max(d2) if d2 else 1
         return t1 // n2, n2
 
+    def legalize_batch(self, genomes: Sequence[Genome]) -> List[Genome]:
+        """Vectorized :meth:`legalize` over a whole population.
+
+        Bit-equal to mapping the scalar path (same integer ops; the tile
+        count uses the same float64 division + ceil), which is what lets
+        ``evolve()`` defer per-child legalization to one NumPy call per
+        generation — the Amdahl bottleneck flagged in DESIGN.md §3.  The
+        divisor-snapped subspace keeps the scalar loop (its per-genome
+        divisor chains don't vectorize profitably at these sizes).
+        """
+        if self.divisors_only or not genomes:
+            return [self.legalize(g) for g in genomes]
+        names = self.wl.loop_names
+        flat = [v for g in genomes for n in names for v in g.triples[n]]
+        arr = np.array(flat, dtype=np.int64).reshape(
+            len(genomes), len(names), 3)           # (B, L, 3)
+        out = np.empty_like(arr)
+        for li, l in enumerate(self.wl.loops):
+            n1 = np.maximum(1, arr[:, li, 1])
+            n2 = np.maximum(1, arr[:, li, 2])
+            if not self.has_level2(l.name):
+                n1, n2 = n1 * n2, np.ones_like(n2)
+            if l.name == self.wl.simd_loop:
+                n2 = np.minimum(_pow2_floor_arr(n2), self.wl.simd_max)
+            over = n1 * n2 > l.bound
+            n1 = np.where(over, np.maximum(1, l.bound // n2), n1)
+            over = n1 * n2 > l.bound
+            if over.any():
+                # n2 alone exceeds the bound; shrink it too
+                if l.name == self.wl.simd_loop:
+                    shrunk = min(_pow2_floor(max(1, l.bound)),
+                                 self.wl.simd_max)
+                else:
+                    shrunk = max(1, l.bound)
+                n2 = np.where(over, shrunk, n2)
+                n1 = np.where(over, 1, n1)
+            out[:, li, 0] = np.maximum(
+                1, np.ceil(l.bound / (n1 * n2))).astype(np.int64)
+            out[:, li, 1] = n1
+            out[:, li, 2] = n2
+        # one bulk C-level conversion; per-element .item()/int() calls here
+        # would cost more than the scalar path saves
+        return [Genome(dict(zip(names, map(tuple, r))))
+                for r in out.tolist()]
+
     # -- sampling ----------------------------------------------------------
     def sample(self, rng: random.Random) -> Genome:
         triples: Dict[str, Triple] = {}
@@ -236,13 +291,18 @@ class GenomeSpace:
 
     # -- mutation (paper §4.1) ----------------------------------------------
     def mutate(self, g: Genome, rng: random.Random,
-               alpha: float = 0.4) -> Genome:
-        """Hybrid mutation: factorization-based w.p. alpha, else random."""
+               alpha: float = 0.4, legalize: bool = True) -> Genome:
+        """Hybrid mutation: factorization-based w.p. alpha, else random.
+
+        ``legalize=False`` returns the raw offspring; the caller batches
+        legalization (``legalize_batch``).  The RNG stream is identical
+        either way, so deferral is bit-transparent.
+        """
         if rng.random() < alpha or self.divisors_only:
             out = self._mutate_factorization(g, rng)
         else:
             out = self._mutate_random(g, rng)
-        return self.legalize(out)
+        return self.legalize(out) if legalize else out
 
     def _mutate_factorization(self, g: Genome, rng: random.Random) -> Genome:
         """Move a divisor between two levels of the same loop.
@@ -281,13 +341,20 @@ class GenomeSpace:
         return out
 
     # -- crossover -----------------------------------------------------------
-    def crossover(self, a: Genome, b: Genome, rng: random.Random) -> Genome:
+    def crossover(self, a: Genome, b: Genome, rng: random.Random,
+                  legalize: bool = True) -> Genome:
         """Exchange whole per-loop triples (paper: factors of the same
-        original loop move together, guaranteeing valid offspring)."""
+        original loop move together, guaranteeing valid offspring).
+
+        Legality is per-loop, so mixing triples of legal parents is
+        already legal — ``legalize=False`` (batch deferral) changes
+        nothing for offspring of legalized parents.
+        """
         triples: Dict[str, Triple] = {}
         for l in self.wl.loop_names:
             triples[l] = (a if rng.random() < 0.5 else b).triples[l]
-        return self.legalize(Genome(triples))
+        out = Genome(triples)
+        return self.legalize(out) if legalize else out
 
     # -- exhaustive enumeration (divisor sub-space, for reference search) -----
     def enumerate_divisor_genomes(self, max_count: Optional[int] = None

@@ -23,6 +23,12 @@ designs strictly serially with no cross-design sharing.  The
 
 ``tuner.tune_workload`` is a thin wrapper over this class, so every existing
 call site keeps working; the engine is the opt-in fast path.
+
+Sessions can be backed by a persistent **design registry**
+(``repro.registry``): an exact fingerprint hit returns the cached winner
+with zero evolutionary evaluations, a near miss warm-starts every design
+with re-legalized neighbor genomes, and finished sweeps are recorded for
+the next process (DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -89,11 +95,12 @@ def pareto_frontier(results: Sequence) -> List:
 def _tune_payload(payload):
     """Module-level worker so ProcessPoolExecutor can pickle the task."""
     (wl, df, perm, hw, cfg, use_mp_seed, divisors_only,
-     incumbent, factor, probe) = payload
+     incumbent, factor, probe, extra_seeds) = payload
     from .tuner import tune_design
     return tune_design(wl, df, perm, hw=hw, cfg=cfg, use_mp_seed=use_mp_seed,
                        divisors_only=divisors_only, abort_latency=incumbent,
-                       abort_factor=factor, probe_epochs=probe)
+                       abort_factor=factor, probe_epochs=probe,
+                       extra_seeds=extra_seeds)
 
 
 class SearchSession:
@@ -115,7 +122,12 @@ class SearchSession:
                  time_budget_s: Optional[float] = None,
                  divisors_only: bool = False,
                  designs: Optional[Sequence[Design]] = None,
-                 session: Optional[SessionConfig] = None):
+                 session: Optional[SessionConfig] = None,
+                 registry=None,
+                 transfer: bool = True,
+                 transfer_k: int = 3,
+                 transfer_max_distance: float = 4.0,
+                 refresh: bool = False):
         self.wl = wl
         self.hw = hw
         self.designs: List[Design] = list(designs or enumerate_designs(wl))
@@ -127,10 +139,60 @@ class SearchSession:
         self.use_mp_seed = use_mp_seed
         self.divisors_only = divisors_only
         self.session = session or SessionConfig()
+        # A sweep over a hand-picked subset of designs must neither be
+        # recorded under the workload's fingerprint (it would poison full
+        # sweeps with a partial winner) nor served from it.
+        self._partial_sweep = designs is not None and \
+            set(self.designs) != set(enumerate_designs(wl))
+        self.registry = registry if not self._partial_sweep else None
+        self.transfer = transfer
+        self.transfer_k = transfer_k
+        self.transfer_max_distance = transfer_max_distance
+        # refresh: skip the exact-hit read and re-run the sweep anyway —
+        # the escape hatch for retuning with a larger budget.  The result
+        # is still recorded; put()'s keep-best merge guarantees a cheap
+        # refresh can't clobber a better cached winner.
+        self.refresh = refresh
         self.report = None
         self._incumbent: Optional[float] = None
+        self._seeds: Dict = {}
         self._built: Dict[Design, Tuple[DesignDescriptor, PerformanceModel,
                                         BatchPerformanceModel]] = {}
+
+    # -- registry integration ----------------------------------------------
+    def _fingerprint(self):
+        from repro.registry import workload_fingerprint
+        # divisors_only restricts the genome space: cache it as its own
+        # family so constrained callers never get unconstrained genomes
+        variant = {"divisors_only": True} if self.divisors_only else None
+        return workload_fingerprint(self.wl, self.hw, variant=variant)
+
+    def _cached_report(self):
+        """Exact-hit fast path: the stored sweep, zero evals run."""
+        rec = self.registry.get(self._fingerprint())
+        if rec is None:
+            return None
+        from repro.registry import report_from_record
+        self.registry.touch(rec.fingerprint)
+        return report_from_record(rec, self.wl, self.hw)
+
+    def _load_transfer_seeds(self) -> None:
+        from repro.registry import transfer_seeds
+        self._seeds = transfer_seeds(
+            self.registry, self._fingerprint(), self.wl,
+            k=self.transfer_k, max_distance=self.transfer_max_distance,
+            divisors_only=self.divisors_only)
+
+    def _design_seeds(self, design: Design):
+        from repro.registry.transfer import design_key
+        df, perm = design
+        return tuple(self._seeds.get(design_key(df, perm), ()))
+
+    def _record(self) -> None:
+        from repro.registry import record_from_report
+        rec = record_from_report(self._fingerprint(), self.wl, self.hw,
+                                 self.report)
+        self.registry.put(rec)
 
     # -- cached per-design construction -----------------------------------
     def built(self, design: Design
@@ -164,7 +226,8 @@ class SearchSession:
                            abort_latency=incumbent
                            if self.session.early_abort else None,
                            abort_factor=self.session.abort_factor,
-                           probe_epochs=self.session.probe_epochs)
+                           probe_epochs=self.session.probe_epochs,
+                           extra_seeds=self._design_seeds(self.designs[i]))
 
     def _run_serial(self) -> List:
         out = []
@@ -199,7 +262,8 @@ class SearchSession:
                            self._incumbent if self.session.early_abort
                            else None,
                            self.session.abort_factor,
-                           self.session.probe_epochs)
+                           self.session.probe_epochs,
+                           self._design_seeds(self.designs[i]))
                 return ex.submit(_tune_payload, payload)
             return ex.submit(self._tune_index, i, self._incumbent)
 
@@ -224,8 +288,22 @@ class SearchSession:
         return results
 
     def run(self):
-        """Sweep all designs; returns a :class:`repro.core.tuner.TuneReport`."""
+        """Sweep all designs; returns a :class:`repro.core.tuner.TuneReport`.
+
+        With a registry attached: an exact fingerprint hit short-circuits
+        to the cached report (``from_cache=True``, zero evals); otherwise
+        cached neighbors seed each design's search and the finished sweep
+        is recorded for future sessions.
+        """
         from .tuner import TuneReport
+        if self.registry is not None:
+            if not self.refresh:
+                cached = self._cached_report()
+                if cached is not None:
+                    self.report = cached
+                    return cached
+            if self.transfer:
+                self._load_transfer_seeds()
         if self.session.executor == "serial":
             results = self._run_serial()
         elif self.session.executor in ("thread", "process"):
@@ -235,6 +313,8 @@ class SearchSession:
                 f"unknown executor {self.session.executor!r}; "
                 "expected 'serial', 'thread' or 'process'")
         self.report = TuneReport(workload=self.wl.name, results=results)
+        if self.registry is not None:
+            self._record()
         return self.report
 
     # -- reporting ---------------------------------------------------------

@@ -88,6 +88,18 @@ class Problem(Generic[G]):
     def key(self, g: G) -> Tuple:
         raise NotImplementedError
 
+    # Optional batched-repair hooks.  A problem that defines
+    # ``finalize_batch`` promises: (a) ``mutate_raw``/``crossover_raw``
+    # draw exactly the RNG stream of ``mutate``/``crossover``, and
+    # (b) ``finalize_batch(children)`` maps each raw child to the genome
+    # the legalizing operator would have produced (and is idempotent on
+    # already-final genomes, since elites pass through it too).  The
+    # engine then repairs a whole generation in one call instead of
+    # per-child Python — the DESIGN.md §3 Amdahl fix.
+    mutate_raw = None
+    crossover_raw = None
+    finalize_batch = None
+
 
 def evolve(problem: Problem[G], cfg: EvoConfig,
            seeds: Sequence[G] = (),
@@ -145,6 +157,14 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
             return True
         return False
 
+    finalize = getattr(problem, "finalize_batch", None)
+    if finalize is not None:
+        mutate_fn = getattr(problem, "mutate_raw", None) or problem.mutate
+        cross_fn = getattr(problem, "crossover_raw", None) \
+            or problem.crossover
+    else:
+        mutate_fn, cross_fn = problem.mutate, problem.crossover
+
     aborted = False
     for epoch in range(cfg.epochs):
         if out_of_budget():
@@ -157,11 +177,13 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
         while len(children) < cfg.population:
             if rng.random() < cfg.crossover_rate and len(parents) >= 2:
                 a, b = rng.sample(range(len(parents)), 2)
-                child = problem.crossover(parents[a], parents[b], rng)
+                child = cross_fn(parents[a], parents[b], rng)
             else:
                 child = parents[rng.randrange(len(parents))]
-            child = problem.mutate(child, rng, cfg.mutation_alpha)
+            child = mutate_fn(child, rng, cfg.mutation_alpha)
             children.append(child)
+        if finalize is not None:
+            children = list(finalize(children))
         scored = score(children)
         if scored[0][0] > best_f:
             best_f, _, best = scored[0]
@@ -204,6 +226,18 @@ class TilingProblem(Problem):
 
     def crossover(self, a, b, rng):
         return self.space.crossover(a, b, rng)
+
+    # Batched-repair hooks (see Problem): per-child legalization is the
+    # engine's Python hot loop, so children are produced raw and repaired
+    # in one vectorized legalize_batch call per generation.
+    def mutate_raw(self, g, rng, alpha):
+        return self.space.mutate(g, rng, alpha, legalize=False)
+
+    def crossover_raw(self, a, b, rng):
+        return self.space.crossover(a, b, rng, legalize=False)
+
+    def finalize_batch(self, children):
+        return self.space.legalize_batch(children)
 
     def fitness(self, g):
         if self.fitness_fn is not None:

@@ -61,6 +61,7 @@ class DesignResult:
 class TuneReport:
     workload: str
     results: List[DesignResult]
+    from_cache: bool = False       # served by the design registry, 0 evals
 
     @property
     def best(self) -> DesignResult:
@@ -80,7 +81,8 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
                 batch_model=None,
                 abort_latency: Optional[float] = None,
                 abort_factor: float = 3.0,
-                probe_epochs: int = 8) -> DesignResult:
+                probe_epochs: int = 8,
+                extra_seeds: Tuple[Genome, ...] = ()) -> DesignResult:
     """Tune the tiling of a single (dataflow, permutation) design.
 
     ``desc``/``model``/``batch_model`` may be supplied prebuilt (the engine
@@ -88,6 +90,8 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
     ``probe_epochs`` have run, the search is cut off if its best genome's
     *raw* latency (penalty-free, so an infeasible-but-promising probe never
     triggers it) is still worse than ``abort_factor x`` the incumbent.
+    ``extra_seeds`` are pre-legalized genomes injected alongside the MP
+    seeds — the registry's transfer warm start.
     """
     t0 = time.perf_counter()
     cfg = cfg or EvoConfig()
@@ -95,9 +99,9 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
     model = model or PerformanceModel(desc, hw)
     space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
 
-    seeds: List[Genome] = []
+    seeds: List[Genome] = list(extra_seeds)
     if use_mp_seed:
-        seeds = mp_solver.seed_population(
+        seeds += mp_solver.seed_population(
             space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
             seed=cfg.seed)
 
@@ -131,18 +135,24 @@ def tune_workload(wl: Workload, hw: HardwareProfile = U250,
                   divisors_only: bool = False,
                   executor: str = "serial",
                   max_workers: Optional[int] = None,
-                  early_abort: bool = False) -> TuneReport:
+                  early_abort: bool = False,
+                  registry=None,
+                  refresh: bool = False) -> TuneReport:
     """Run the full Odyssey flow over the pruned design space.
 
     Thin wrapper over :class:`repro.core.engine.SearchSession`.  Defaults
     (serial, no early-abort) reproduce the classic strictly-sequential sweep
     exactly; pass ``executor="process"``/``"thread"`` and/or
-    ``early_abort=True`` to opt into the parallel engine.
+    ``early_abort=True`` to opt into the parallel engine.  ``registry`` (a
+    :class:`repro.registry.RegistryStore`) adds the persistent cache: exact
+    hits skip the sweep, near misses warm-start it, results are recorded.
+    ``refresh=True`` forces a re-tune (the better result is kept).
     """
     from .engine import SearchSession, SessionConfig
     session = SearchSession(
         wl, hw=hw, cfg=cfg, use_mp_seed=use_mp_seed,
         time_budget_s=time_budget_s, divisors_only=divisors_only,
+        registry=registry, refresh=refresh,
         session=SessionConfig(executor=executor, max_workers=max_workers,
                               early_abort=early_abort))
     return session.run()

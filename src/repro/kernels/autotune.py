@@ -12,11 +12,14 @@ tiling.  The evolutionary engine is literally ``repro.core.evolutionary``.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import math
+import os
 import random
-from typing import Optional, Sequence, Tuple
+import threading
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -174,18 +177,130 @@ class TpuMatmulProblem(Problem):
 
 
 @functools.lru_cache(maxsize=4096)
-def tune_matmul(M: int, N: int, K: int, dtype_bytes: int = 2,
-                evals: int = 2000, seed: int = 0) -> MatmulConfig:
-    """Search the block-shape space for (M, N, K); returns a MatmulConfig."""
+def _tune_matmul_cached(M: int, N: int, K: int, dtype_bytes: int,
+                        evals: int, seed: int,
+                        extra_seeds: Tuple[BlockGenome, ...]
+                        ) -> Tuple[MatmulConfig, int]:
+    """(config, evals_spent); ``extra_seeds`` warm-start the search."""
     model = TpuMatmulModel(M=M, N=N, K=K, dtype_bytes=dtype_bytes)
     problem = TpuMatmulProblem(model)
     cfg = EvoConfig(population=48, parents=12, epochs=60, seed=seed,
                     max_evals=evals)
-    seeds = [(min(M, 256), min(K, 512), min(N, 256), True),
-             (min(M, 128), min(K, 128), min(N, 128), True)]
+    seeds = list(extra_seeds) + \
+        [(min(M, 256), min(K, 512), min(N, 256), True),
+         (min(M, 128), min(K, 128), min(N, 128), True)]
     res = evolve(problem, cfg, seeds=seeds)
     bm, bk, bn, k_inner = res.best
-    return MatmulConfig(bm=bm, bk=bk, bn=bn, k_innermost=k_inner)
+    return (MatmulConfig(bm=bm, bk=bk, bn=bn, k_innermost=k_inner),
+            res.evals)
+
+
+def tune_matmul(M: int, N: int, K: int, dtype_bytes: int = 2,
+                evals: int = 2000, seed: int = 0) -> MatmulConfig:
+    """Search the block-shape space for (M, N, K); returns a MatmulConfig."""
+    return _tune_matmul_cached(M, N, K, dtype_bytes, evals, seed, ())[0]
+
+
+# ---------------------------------------------------------------------- #
+# Registry-backed resolution: in-memory LRU in front of the on-disk store
+# ---------------------------------------------------------------------- #
+_lru_lock = threading.Lock()
+_config_lru: "collections.OrderedDict[Tuple, MatmulConfig]" = \
+    collections.OrderedDict()
+_CONFIG_LRU_MAX = 4096
+
+
+def default_registry():
+    """The process-default block registry: $REPRO_REGISTRY_DIR, else None.
+
+    Returning None (no env var) keeps library behavior hermetic — nothing
+    is read from or written to the user's home directory unless a
+    registry is opted into explicitly or via the environment.
+    """
+    from repro.registry import RegistryStore, DEFAULT_ROOT_ENV
+    root = os.environ.get(DEFAULT_ROOT_ENV)
+    return RegistryStore(root) if root else None
+
+
+def _block_entry(cfg: MatmulConfig, model: TpuMatmulModel) -> Dict:
+    g = (cfg.bm, cfg.bk, cfg.bn, cfg.k_innermost)
+    return {"bm": cfg.bm, "bk": cfg.bk, "bn": cfg.bn,
+            "k_innermost": cfg.k_innermost,
+            "latency_s": model.latency_s(g), "mfu": model.mfu(g),
+            "feasible": model.vmem_bytes(g) <= model.hw.vmem_bytes}
+
+
+def resolve_matmul_config(M: int, N: int, K: int, dtype_bytes: int = 2,
+                          registry=None, evals: int = 2000,
+                          seed: int = 0,
+                          stats: Optional[Dict[str, int]] = None
+                          ) -> MatmulConfig:
+    """Block shape for (M, N, K): LRU -> disk registry -> warm-started tune.
+
+    The call-time path the kernels use.  Exact registry hits return the
+    cached shape with zero search evals; misses warm-start from the
+    nearest cached matmul (dims clamped), tune, and record — so every
+    replica sharing a registry root tunes each shape once, fleet-wide.
+    ``stats`` (optional dict) is incremented with the source of the
+    answer: ``lru_hits`` / ``disk_hits`` / ``tuned``.
+
+    The LRU is keyed by (shape, dtype, registry root), so resolving
+    against different registries never cross-talks and a registry-backed
+    call always reaches its store at least once.  ``evals``/``seed`` are
+    deliberately not in the key: the first config resolved for a shape
+    is reused for the process lifetime — call :func:`tune_matmul` for a
+    budget-controlled search.
+    """
+    def count(source):
+        if stats is not None:
+            stats[source] = stats.get(source, 0) + 1
+
+    registry = registry if registry is not None else default_registry()
+    key = (M, N, K, dtype_bytes,
+           registry.root if registry is not None else None)
+    with _lru_lock:
+        hit = _config_lru.get(key)
+        if hit is not None:
+            _config_lru.move_to_end(key)
+    if hit is not None:
+        count("lru_hits")
+        return hit
+
+    fp = rec = None
+    if registry is not None:
+        from repro.registry import matmul_block_fingerprint
+        fp = matmul_block_fingerprint(M, N, K, dtype_bytes, TPU_V5E)
+        rec = registry.get(fp)
+    if rec is not None:
+        b = rec.best
+        cfg = MatmulConfig(bm=b["bm"], bk=b["bk"], bn=b["bn"],
+                           k_innermost=b["k_innermost"])
+        registry.touch(fp)
+        count("disk_hits")
+    else:
+        extra: Tuple[BlockGenome, ...] = ()
+        if registry is not None:
+            extra = tuple(
+                (min(r.best["bm"], M), min(r.best["bk"], K),
+                 min(r.best["bn"], N), r.best["k_innermost"])
+                for _, r in registry.neighbors(fp, k=2))
+        cfg, spent = _tune_matmul_cached(M, N, K, dtype_bytes, evals, seed,
+                                         extra)
+        count("tuned")
+        if registry is not None:
+            from repro.registry import Record
+            model = TpuMatmulModel(M=M, N=N, K=K, dtype_bytes=dtype_bytes)
+            registry.put(Record(
+                fingerprint=fp.digest, family=fp.family,
+                features=list(fp.features), workload=fp.workload,
+                kind="tpu_block", hardware=TPU_V5E.name,
+                best=_block_entry(cfg, model), pareto=[], evals=spent))
+    with _lru_lock:
+        _config_lru[key] = cfg
+        _config_lru.move_to_end(key)
+        while len(_config_lru) > _CONFIG_LRU_MAX:
+            _config_lru.popitem(last=False)
+    return cfg
 
 
 def predicted_mfu(M: int, N: int, K: int, cfg: MatmulConfig,

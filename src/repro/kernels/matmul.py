@@ -93,13 +93,35 @@ def _kernel_k_outer(a_ref, b_ref, o_ref, *, bk: int, K: int, mask: bool):
         o_ref[...] = (o_ref[...].astype(jnp.float32) + part).astype(o_ref.dtype)
 
 
+def resolve_config(M: int, N: int, K: int,
+                   dtype_bytes: int = 2, registry=None) -> MatmulConfig:
+    """Tuned block shape for (M, N, K) from the design registry.
+
+    In-memory LRU in front of the on-disk store; a miss tunes (warm-
+    started from the nearest cached matmul) and records the winner so
+    other processes sharing the registry root skip the search entirely.
+    """
+    from .autotune import resolve_matmul_config
+    return resolve_matmul_config(M, N, K, dtype_bytes, registry=registry)
+
+
 def matmul(a: jax.Array, b: jax.Array,
            config: Optional[MatmulConfig] = None,
            out_dtype: Optional[jnp.dtype] = None) -> jax.Array:
-    """``a @ b`` via the tunable Pallas kernel.  Any (M, K) x (K, N)."""
-    config = config or MatmulConfig()
+    """``a @ b`` via the tunable Pallas kernel.  Any (M, K) x (K, N).
+
+    ``config="auto"`` resolves the block shape at call time through the
+    design registry (see :func:`resolve_config`); ``None`` keeps the
+    static default.
+    """
     M, K = a.shape
     K2, N = b.shape
+    if isinstance(config, str):
+        if config != "auto":
+            raise ValueError(f"unknown config {config!r}; "
+                             "expected a MatmulConfig, None or 'auto'")
+        config = resolve_config(M, N, K, dtype_bytes=a.dtype.itemsize)
+    config = config or MatmulConfig()
     assert K == K2, (a.shape, b.shape)
     out_dtype = out_dtype or a.dtype
     bm, bk, bn = (min(config.bm, M), min(config.bk, K), min(config.bn, N))

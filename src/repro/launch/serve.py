@@ -25,6 +25,10 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--registry-dir", default=None,
+                    help="shared design-registry root; replicas pointing at "
+                         "the same dir share tuned kernels (default: "
+                         "$REPRO_REGISTRY_DIR if set, else disabled)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -51,7 +55,21 @@ def main(argv=None):
             params = jax.tree_util.tree_unflatten(tdef, leaves)
             print(f"[serve] restored {path}")
 
-    eng = ServingEngine(model, params, ServeConfig(max_batch=args.max_batch))
+    import os
+    tuning = None
+    from repro.registry import DEFAULT_ROOT_ENV
+    registry_dir = args.registry_dir or os.environ.get(DEFAULT_ROOT_ENV)
+    if registry_dir:
+        from repro.registry import RegistryStore, TuningService
+        tuning = TuningService(RegistryStore(registry_dir))
+
+    eng = ServingEngine(model, params, ServeConfig(max_batch=args.max_batch),
+                        tuning=tuning)
+    if tuning is not None:
+        print(f"[serve] registry {registry_dir}: resolved "
+              f"{len(eng.kernel_configs)} GEMM block shapes "
+              f"({eng.kernel_stats['shared']} shared from other replicas, "
+              f"{eng.kernel_stats['tuned']} tuned here)")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(2, 8))
                .astype(np.int32) for _ in range(args.requests)]

@@ -1,0 +1,130 @@
+"""Operator CLI for the design registry.
+
+    python -m repro.registry list   [--root DIR]
+    python -m repro.registry show   <fingerprint-prefix>
+    python -m repro.registry evict  <fingerprint-prefix> | --keep N
+    python -m repro.registry export [--out FILE]
+
+Inspect / trim / dump the on-disk tuning cache without writing code.
+The root defaults to $REPRO_REGISTRY_DIR, else ~/.cache/repro-registry.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+from .store import RegistryStore, Record, _latency, default_root
+
+
+def _age(ts: float) -> str:
+    if not ts:
+        return "-"
+    dt = max(0.0, time.time() - ts)
+    for unit, sec in (("d", 86400), ("h", 3600), ("m", 60)):
+        if dt >= sec:
+            return f"{dt / sec:.0f}{unit}"
+    return f"{dt:.0f}s"
+
+
+def _resolve(store: RegistryStore, prefix: str) -> Optional[Record]:
+    matches = [r for r in store.iter_records()
+               if r.fingerprint.startswith(prefix)]
+    if not matches:
+        print(f"no record matches {prefix!r}", file=sys.stderr)
+        return None
+    if len(matches) > 1:
+        print(f"{prefix!r} is ambiguous ({len(matches)} matches); "
+              "use a longer prefix", file=sys.stderr)
+        return None
+    return matches[0]
+
+
+def cmd_list(store: RegistryStore, args) -> int:
+    rows = list(store.iter_records())
+    print(f"{'fingerprint':14s} {'kind':9s} {'workload':24s} {'hw':8s} "
+          f"{'latency':>12s} {'evals':>7s} {'hits':>5s} {'age':>5s}")
+    for rec in sorted(rows, key=lambda r: -r.updated_at):
+        print(f"{rec.fingerprint[:12]:14s} {rec.kind:9s} "
+              f"{rec.workload[:24]:24s} {rec.hardware:8s} "
+              f"{_latency(rec.best):12.4g} {rec.evals:7d} {rec.hits:5d} "
+              f"{_age(rec.updated_at):>5s}")
+    print(f"# {len(rows)} record(s) in {store.root}")
+    return 0
+
+
+def cmd_show(store: RegistryStore, args) -> int:
+    rec = _resolve(store, args.fingerprint)
+    if rec is None:
+        return 1
+    json.dump(rec.to_json(), sys.stdout, indent=2, sort_keys=True)
+    print()
+    return 0
+
+
+def cmd_evict(store: RegistryStore, args) -> int:
+    if args.keep is not None:
+        dropped = store.evict_lru(args.keep)
+        print(f"evicted {len(dropped)} record(s), kept newest {args.keep}")
+        return 0
+    if not args.fingerprint:
+        print("evict needs a fingerprint prefix or --keep N",
+              file=sys.stderr)
+        return 1
+    rec = _resolve(store, args.fingerprint)
+    if rec is None:
+        return 1
+    store.evict(rec.fingerprint)
+    print(f"evicted {rec.fingerprint[:12]} ({rec.workload})")
+    return 0
+
+
+def cmd_export(store: RegistryStore, args) -> int:
+    payload = [r.to_json() for r in store.iter_records()]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"exported {len(payload)} record(s) to {args.out}")
+    else:
+        json.dump(payload, sys.stdout, indent=2, sort_keys=True)
+        print()
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    # --root is accepted before or after the subcommand.  Both copies use
+    # SUPPRESS (and the value is read with getattr below): any concrete
+    # default would let the subparser's unset copy overwrite a value
+    # parsed at the top level
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("--root", default=argparse.SUPPRESS,
+                        help=f"registry root (default: {default_root()})")
+    ap = argparse.ArgumentParser(prog="python -m repro.registry",
+                                 description=__doc__, parents=[common])
+    sub = ap.add_subparsers(dest="command", required=True)
+    sub.add_parser("list", help="one row per cached workload",
+                   parents=[common])
+    p = sub.add_parser("show", help="full JSON of one record",
+                       parents=[common])
+    p.add_argument("fingerprint")
+    p = sub.add_parser("evict", help="drop one record, or trim with --keep",
+                       parents=[common])
+    p.add_argument("fingerprint", nargs="?")
+    p.add_argument("--keep", type=int, default=None,
+                   help="keep only the N most recently used records")
+    p = sub.add_parser("export", help="dump every record as one JSON array",
+                       parents=[common])
+    p.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    store = RegistryStore(getattr(args, "root", None))
+    return {"list": cmd_list, "show": cmd_show,
+            "evict": cmd_evict, "export": cmd_export}[args.command](store,
+                                                                    args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

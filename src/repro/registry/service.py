@@ -1,0 +1,177 @@
+"""TuningService: synchronous lookups, background tuning (DESIGN.md §9).
+
+The service is the front door serving replicas use: ``lookup`` answers
+from an in-memory LRU (then disk) without ever blocking on search;
+``get_or_tune`` adds the miss path — tune inline (``block=True``) or
+hand the workload to a single background worker thread and return
+``None`` so the caller can fall back to a default config now and pick
+up the tuned one on a later call.
+
+The worker runs sweeps with the *serial* executor by default: the
+service may live inside a serving process whose threads make forked
+pools unsafe, and background tuning is throughput, not latency, work.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+from typing import Dict, Optional
+
+from repro.core.hardware import HardwareProfile, U250
+from repro.core.workloads import Workload
+
+from .fingerprint import workload_fingerprint
+from .store import Record, RegistryStore
+from .transfer import report_from_record
+
+
+class TuningService:
+    def __init__(self, store: Optional[RegistryStore] = None,
+                 hw: HardwareProfile = U250,
+                 lru_size: int = 128):
+        # explicit identity check: RegistryStore has __len__, so an empty
+        # store is falsy and `store or ...` would silently retarget the
+        # default root
+        self.store = store if store is not None else RegistryStore()
+        self.hw = hw
+        self.lru_size = lru_size
+        self._lru: "collections.OrderedDict[str, Record]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._pending: set = set()
+        self._worker: Optional[threading.Thread] = None
+        self.stats: Dict[str, int] = collections.Counter()
+
+    def _fp(self, wl: Workload, hw: Optional[HardwareProfile] = None,
+            divisors_only: bool = False):
+        variant = {"divisors_only": True} if divisors_only else None
+        return workload_fingerprint(wl, hw or self.hw, variant=variant)
+
+    # -- lookups --------------------------------------------------------
+    def lookup(self, wl: Workload,
+               hw: Optional[HardwareProfile] = None,
+               divisors_only: bool = False) -> Optional[Record]:
+        """Exact-hit record for ``wl``, or None.  Never tunes."""
+        fp = self._fp(wl, hw, divisors_only)
+        with self._lock:
+            rec = self._lru.get(fp.digest)
+            if rec is not None:
+                self._lru.move_to_end(fp.digest)
+                self.stats["lru_hits"] += 1
+                return rec
+        rec = self.store.get(fp)
+        if rec is not None:
+            self.stats["disk_hits"] += 1
+            self.store.touch(fp)
+            self._remember(rec)
+        else:
+            self.stats["misses"] += 1
+        return rec
+
+    def _remember(self, rec: Record) -> None:
+        with self._lock:
+            self._lru[rec.fingerprint] = rec
+            self._lru.move_to_end(rec.fingerprint)
+            while len(self._lru) > self.lru_size:
+                self._lru.popitem(last=False)
+
+    def invalidate(self, wl: Workload,
+                   hw: Optional[HardwareProfile] = None,
+                   divisors_only: bool = False) -> None:
+        fp = self._fp(wl, hw, divisors_only)
+        with self._lock:
+            self._lru.pop(fp.digest, None)
+        self.store.evict(fp)
+
+    # -- miss path ------------------------------------------------------
+    def get_or_tune(self, wl: Workload, cfg=None, block: bool = True,
+                    **session_kwargs):
+        """Cached ``TuneReport`` on a hit; tune on a miss.
+
+        Hit: reconstructed report, ``from_cache=True``, zero evals.
+        Miss + ``block``: runs the sweep inline (recording the result).
+        Miss + ``not block``: schedules background tuning, returns None.
+        """
+        rec = self.lookup(
+            wl, divisors_only=session_kwargs.get("divisors_only", False))
+        if rec is not None:
+            return report_from_record(rec, wl, self.hw)
+        if not block:
+            self.schedule(wl, cfg=cfg, **session_kwargs)
+            return None
+        return self._tune(wl, cfg, session_kwargs)
+
+    def _tune(self, wl: Workload, cfg, session_kwargs):
+        from repro.core.engine import SearchSession, SessionConfig
+        session_kwargs = dict(session_kwargs)
+        session_kwargs.setdefault("session", SessionConfig(executor="serial"))
+        sess = SearchSession(wl, hw=self.hw, cfg=cfg,
+                             registry=self.store, **session_kwargs)
+        report = sess.run()
+        self.stats["tunes"] += 1
+        rec = self.store.get(self._fp(
+            wl, divisors_only=session_kwargs.get("divisors_only", False)))
+        if rec is not None:
+            self._remember(rec)
+        return report
+
+    # -- background worker ----------------------------------------------
+    def schedule(self, wl: Workload, cfg=None, **session_kwargs) -> bool:
+        """Queue ``wl`` for background tuning; False if already pending."""
+        fp = self._fp(wl, divisors_only=session_kwargs.get("divisors_only",
+                                                           False))
+        with self._lock:
+            if fp.digest in self._pending:
+                return False
+            self._pending.add(fp.digest)
+            # enqueue under the lock: the worker only exits after taking
+            # the same lock and re-checking the queue is empty, so an
+            # item is never stranded behind a worker that just timed out
+            self._queue.put((fp.digest, wl, cfg, session_kwargs))
+            if self._worker is None or not self._worker.is_alive():
+                self._worker = threading.Thread(
+                    target=self._drain, name="tuning-service", daemon=True)
+                self._worker.start()
+        self.stats["scheduled"] += 1
+        return True
+
+    def _drain(self) -> None:
+        while True:
+            try:
+                item = self._queue.get(timeout=0.5)
+            except queue.Empty:
+                with self._lock:
+                    if self._queue.empty():
+                        self._worker = None
+                        return
+                continue
+            if item is None:            # close() wake-up, not work
+                self._queue.task_done()
+                continue
+            digest, wl, cfg, session_kwargs = item
+            try:
+                self._tune(wl, cfg, session_kwargs)
+            except Exception:           # noqa: BLE001 — cache, not service
+                self.stats["tune_errors"] += 1
+            finally:
+                with self._lock:
+                    self._pending.discard(digest)
+                self._queue.task_done()
+
+    def flush(self, timeout: Optional[float] = None) -> bool:
+        """Wait for queued background tunes; True if the queue drained."""
+        deadline = threading.Event()
+        t = threading.Thread(target=lambda: (self._queue.join(),
+                                             deadline.set()), daemon=True)
+        t.start()
+        return deadline.wait(timeout)
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Wait for in-flight work; the idle worker then exits on its own."""
+        worker = self._worker
+        if worker is not None and worker.is_alive():
+            self._queue.put(None)       # wake a blocked get() promptly
+            worker.join(timeout)

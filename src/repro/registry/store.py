@@ -1,0 +1,296 @@
+"""Content-addressed on-disk store of tuned designs (DESIGN.md §9).
+
+Layout (all JSON, human-inspectable):
+
+    <root>/records/<digest[:2]>/<digest>.json
+
+One record per workload fingerprint.  Writes are atomic (temp file +
+``os.replace``) so concurrent tuners and serving replicas can share a
+root without locks: readers always see a complete record, reads never
+rewrite records (hit counts go to a ``.hits`` sidecar), and the ``put``
+merge policy keeps the better ``best`` — concurrent ``put``s of
+different quality can still race last-writer-wins (see :meth:`put`).
+
+Records are versioned.  ``SCHEMA_VERSION`` is the current layout; older
+versions are migrated on read (``_MIGRATIONS``), records from a *newer*
+schema or with unparseable JSON are quarantined (renamed to
+``*.corrupt``) instead of crashing the caller — a registry is a cache,
+and a cache must never take the service down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from .fingerprint import Fingerprint
+
+SCHEMA_VERSION = 2
+
+DEFAULT_ROOT_ENV = "REPRO_REGISTRY_DIR"
+
+
+def default_root() -> str:
+    """$REPRO_REGISTRY_DIR, else ~/.cache/repro-registry."""
+    env = os.environ.get(DEFAULT_ROOT_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro-registry")
+
+
+# ------------------------------------------------------------------ #
+# Schema migrations: version -> fn(record) -> record of version+1
+# ------------------------------------------------------------------ #
+def _migrate_v1(rec: Dict) -> Dict:
+    # v1 records predate the Pareto frontier and hit accounting.
+    rec.setdefault("pareto", [])
+    rec.setdefault("hits", 0)
+    rec["schema_version"] = 2
+    return rec
+
+
+_MIGRATIONS: Dict[int, Callable[[Dict], Dict]] = {1: _migrate_v1}
+
+
+@dataclasses.dataclass
+class Record:
+    """One tuned workload: identity + winner + frontier + bookkeeping."""
+
+    fingerprint: str
+    family: str
+    features: List[float]
+    workload: str
+    kind: str                      # "systolic" | "tpu_block"
+    hardware: str
+    best: Dict                     # kind-specific payload (see wiring)
+    pareto: List[Dict]             # non-dominated set (used for transfer)
+    sweep: List[Dict] = dataclasses.field(default_factory=list)
+    # ^ every per-design result of the recorded sweep, so an exact hit
+    #   reconstructs the full report, not just the frontier (older
+    #   records without it fall back to pareto)
+    evals: int = 0
+    seconds: float = 0.0
+    created_at: float = 0.0
+    updated_at: float = 0.0
+    hits: int = 0
+    schema_version: int = SCHEMA_VERSION
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, payload: Dict) -> "Record":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in payload.items() if k in fields})
+
+
+class RegistryStore:
+    """Filesystem-backed registry of :class:`Record`s keyed by fingerprint."""
+
+    def __init__(self, root: Optional[str] = None):
+        self.root = root or default_root()
+        self._records_dir = os.path.join(self.root, "records")
+
+    # -- paths ----------------------------------------------------------
+    def _path(self, digest: str) -> str:
+        return os.path.join(self._records_dir, digest[:2], digest + ".json")
+
+    # -- read -----------------------------------------------------------
+    def get(self, fp) -> Optional[Record]:
+        """Record for ``fp`` (a Fingerprint or digest str), or None."""
+        digest = fp.digest if isinstance(fp, Fingerprint) else fp
+        return self._load(self._path(digest))
+
+    def _load(self, path: str) -> Optional[Record]:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            version = payload.get("schema_version")
+            if not isinstance(version, int):
+                raise ValueError("missing schema_version")
+            while version in _MIGRATIONS:
+                payload = _MIGRATIONS[version](payload)
+                version = payload["schema_version"]
+            if version != SCHEMA_VERSION:
+                raise ValueError(f"unknown schema_version {version}")
+            rec = Record.from_json(payload)
+            rec.hits += self._read_hits(path)
+            return rec
+        except FileNotFoundError:
+            return None
+        except (ValueError, KeyError, TypeError, json.JSONDecodeError):
+            self._quarantine(path)
+            return None
+
+    def _read_hits(self, record_path: str) -> int:
+        try:
+            with open(record_path + ".hits") as f:
+                return int(f.read().strip() or 0)
+        except (FileNotFoundError, ValueError):
+            return 0
+
+    def _quarantine(self, path: str) -> None:
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
+
+    def keys(self) -> List[str]:
+        return [rec.fingerprint for rec in self.iter_records()]
+
+    def iter_records(self) -> Iterator[Record]:
+        if not os.path.isdir(self._records_dir):
+            return
+        for shard in sorted(os.listdir(self._records_dir)):
+            shard_dir = os.path.join(self._records_dir, shard)
+            if not os.path.isdir(shard_dir):
+                continue
+            for name in sorted(os.listdir(shard_dir)):
+                if not name.endswith(".json"):
+                    continue
+                rec = self._load(os.path.join(shard_dir, name))
+                if rec is not None:
+                    yield rec
+
+    def neighbors(self, fp: Fingerprint, k: int = 3,
+                  max_distance: float = 4.0,
+                  include_exact: bool = False
+                  ) -> List[Tuple[float, Record]]:
+        """Comparable records nearest to ``fp`` (see fingerprint.nearest)."""
+        out: List[Tuple[float, Record]] = []
+        for rec in self.iter_records():
+            if rec.family != fp.family:
+                continue
+            if not include_exact and rec.fingerprint == fp.digest:
+                continue
+            other = Fingerprint(digest=rec.fingerprint, family=rec.family,
+                                features=tuple(rec.features),
+                                workload=rec.workload)
+            d = fp.distance(other)
+            if d is not None and d <= max_distance:
+                out.append((d, rec))
+        out.sort(key=lambda t: (t[0], t[1].fingerprint))
+        return out[:k]
+
+    # -- write ----------------------------------------------------------
+    def put(self, rec: Record, keep_best: bool = True) -> Record:
+        """Persist ``rec`` atomically.
+
+        With ``keep_best`` (the default), an existing record whose best
+        latency is strictly better survives — only bookkeeping is
+        refreshed — so a short-budget retune can never clobber a
+        long-budget winner.  (The read-merge-write is not transactional:
+        two concurrent ``put``s of *different* quality can still race,
+        last writer wins; per-workload writes are rare enough that this
+        is accepted rather than locked.)  Live hit counts stay in the
+        ``.hits`` sidecar (see :meth:`touch`), so they survive the
+        rewrite; the record's own ``hits`` field is written as 0.
+        """
+        now = time.time()
+        existing = self.get(rec.fingerprint)
+        if existing is not None and keep_best and \
+                _latency(existing.best) < _latency(rec.best):
+            rec = dataclasses.replace(
+                existing, updated_at=now, hits=0,
+                evals=max(existing.evals, rec.evals))
+        else:
+            rec = dataclasses.replace(
+                rec, schema_version=SCHEMA_VERSION,
+                created_at=existing.created_at if existing else now,
+                hits=0, updated_at=now)
+        self._write(rec)
+        return dataclasses.replace(rec, hits=self._read_hits(
+            self._path(rec.fingerprint)))
+
+    def touch(self, fp) -> None:
+        """Record a cache hit.
+
+        Hit counts live in a tiny ``.hits`` sidecar and recency is the
+        record file's mtime — touch never rewrites the record itself, so
+        a reader's touch can never clobber a concurrent writer's better
+        result (racing touches may lose a count; nothing else).
+        """
+        digest = fp.digest if isinstance(fp, Fingerprint) else fp
+        path = self._path(digest)
+        if not os.path.exists(path):
+            return
+        hits = self._read_hits(path) + 1
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(str(hits))
+            os.replace(tmp, path + ".hits")
+            os.utime(path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def _write(self, rec: Record) -> None:
+        path = self._path(rec.fingerprint)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(rec.to_json(), f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- eviction -------------------------------------------------------
+    def evict(self, fp) -> bool:
+        """Drop one record; True if it existed."""
+        digest = fp.digest if isinstance(fp, Fingerprint) else fp
+        try:
+            os.unlink(self._path(digest))
+        except FileNotFoundError:
+            return False
+        try:
+            os.unlink(self._path(digest) + ".hits")
+        except OSError:
+            pass
+        return True
+
+    def evict_lru(self, max_records: int) -> List[str]:
+        """Trim to ``max_records``, dropping least-recently-used first.
+
+        Recency is the later of the record's ``updated_at`` and the file
+        mtime (``touch`` bumps only the mtime)."""
+        def recency(r: Record):
+            try:
+                mtime = os.path.getmtime(self._path(r.fingerprint))
+            except OSError:
+                mtime = 0.0
+            return (max(r.updated_at, mtime), r.fingerprint)
+
+        recs = sorted(self.iter_records(), key=recency)
+        dropped = []
+        excess = len(recs) - max_records
+        for rec in recs[:max(0, excess)]:
+            if self.evict(rec.fingerprint):
+                dropped.append(rec.fingerprint)
+        return dropped
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.iter_records())
+
+
+def _latency(best: Dict) -> float:
+    """Order key for the keep-best merge; +inf for infeasible results."""
+    if not best.get("feasible", True):
+        return float("inf")
+    for key in ("latency_cycles", "latency_s"):
+        if key in best:
+            return float(best[key])
+    return float("inf")

@@ -1,0 +1,184 @@
+"""Record <-> search-stack conversion and transfer seeding (DESIGN.md §9).
+
+Three jobs:
+
+  * serialize a finished ``TuneReport`` into a :class:`~.store.Record`
+    (the winner plus the Pareto frontier, genomes as plain triples);
+  * reconstruct a ``TuneReport`` from a record — the *exact-hit fast
+    path*: descriptors and models are rebuilt (cheap, deterministic)
+    but zero evolutionary evaluations run (``evals == 0``);
+  * *transfer seeding*: re-legalize cached neighbors' genomes against a
+    new workload's bounds, so a 1000x1024x1024 MM starts its search from
+    the cached 1024^3 winner instead of from scratch.  Re-legalization
+    is exactly ``GenomeSpace.legalize`` — the tile factors carry over,
+    the derived tile counts re-cover the new (possibly padded) domain.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.design_space import (DesignPoint, Genome, GenomeSpace,
+                                     Permutation)
+from repro.core.descriptor import build_descriptor
+from repro.core.evolutionary import EvoResult
+from repro.core.hardware import HardwareProfile
+from repro.core.perf_model import PerformanceModel
+from repro.core.workloads import Workload
+
+from .fingerprint import Fingerprint
+from .store import Record, RegistryStore
+
+DesignKey = Tuple[Tuple[str, ...], Tuple[str, ...], Tuple[str, ...]]
+
+# How many transfer seeds a single design accepts: enough to carry the
+# neighbor's winner + a couple of frontier points, few enough that the
+# random-sampled population still explores.
+MAX_SEEDS_PER_DESIGN = 4
+
+
+def design_key(dataflow: Sequence[str], perm: Permutation) -> DesignKey:
+    return (tuple(dataflow), tuple(perm.outer), tuple(perm.inner))
+
+
+# ------------------------------------------------------------------ #
+# TuneReport -> Record
+# ------------------------------------------------------------------ #
+def entry_from_result(r) -> Dict:
+    """Serializable payload of one ``DesignResult``."""
+    g = r.evo.best
+    return {
+        "dataflow": list(r.design.dataflow),
+        "perm_outer": list(r.design.permutation.outer),
+        "perm_inner": list(r.design.permutation.inner),
+        "genome": {loop: list(t) for loop, t in g.as_dict().items()},
+        "latency_cycles": float(r.latency_cycles),
+        "throughput": float(r.throughput),
+        "dsp": int(r.dsp),
+        "bram": int(r.bram),
+        "feasible": bool(r.feasible),
+        "aborted": bool(r.aborted),
+    }
+
+
+def record_from_report(fp: Fingerprint, wl: Workload, hw: HardwareProfile,
+                       report) -> Record:
+    """Serialize a finished sweep: winner + frontier + eval accounting."""
+    from repro.core.engine import pareto_frontier
+    best = report.best
+    frontier = pareto_frontier(report.results)
+    if best not in frontier:
+        frontier = [best] + frontier
+    return Record(
+        fingerprint=fp.digest,
+        family=fp.family,
+        features=list(fp.features),
+        workload=wl.name,
+        kind="systolic",
+        hardware=hw.name,
+        best=entry_from_result(best),
+        pareto=[entry_from_result(r) for r in frontier],
+        sweep=[entry_from_result(r) for r in report.results],
+        evals=sum(r.evo.evals for r in report.results),
+        seconds=sum(r.seconds for r in report.results),
+    )
+
+
+# ------------------------------------------------------------------ #
+# Record -> TuneReport  (exact-hit fast path)
+# ------------------------------------------------------------------ #
+def _entry_design(entry: Dict) -> Tuple[Tuple[str, ...], Permutation]:
+    return (tuple(entry["dataflow"]),
+            Permutation(outer=tuple(entry["perm_outer"]),
+                        inner=tuple(entry["perm_inner"])))
+
+
+def _entry_genome(entry: Dict) -> Genome:
+    return Genome({loop: tuple(t) for loop, t in entry["genome"].items()})
+
+
+def result_from_entry(entry: Dict, wl: Workload, hw: HardwareProfile):
+    """Rebuild a ``DesignResult`` from a cached entry — zero evals.
+
+    The descriptor and models are reconstructed (they are deterministic
+    functions of the design); the metrics come from the record, so the
+    fast path needs no evaluation at all.
+    """
+    from repro.core.tuner import DesignResult
+    dataflow, perm = _entry_design(entry)
+    g = _entry_genome(entry)
+    desc = build_descriptor(wl, dataflow, perm)
+    model = PerformanceModel(desc, hw)
+    evo = EvoResult(best=g, best_fitness=-float(entry["latency_cycles"]),
+                    evals=0, seconds=0.0, trace=[])
+    return DesignResult(
+        design=DesignPoint(dataflow, perm, g),
+        descriptor=desc, model=model, evo=evo,
+        latency_cycles=float(entry["latency_cycles"]),
+        throughput=float(entry["throughput"]),
+        dsp=int(entry["dsp"]), bram=int(entry["bram"]),
+        feasible=bool(entry["feasible"]),
+        seconds=0.0,
+        aborted=bool(entry.get("aborted", False)),
+    )
+
+
+def report_from_record(rec: Record, wl: Workload, hw: HardwareProfile):
+    """The cached sweep as a ``TuneReport`` with ``from_cache=True``.
+
+    Reconstructed from the full per-design ``sweep`` when present, so a
+    hit has the same report shape as the run it cached; records written
+    before the ``sweep`` field fall back to the frontier.
+    """
+    from repro.core.tuner import TuneReport
+    entries = rec.sweep or rec.pareto or [rec.best]
+    results = [result_from_entry(e, wl, hw) for e in entries]
+    return TuneReport(workload=wl.name, results=results, from_cache=True)
+
+
+# ------------------------------------------------------------------ #
+# Transfer seeding
+# ------------------------------------------------------------------ #
+def seeds_from_neighbors(neighbors: Sequence[Tuple[float, Record]],
+                         wl: Workload,
+                         max_per_design: int = MAX_SEEDS_PER_DESIGN,
+                         divisors_only: bool = False
+                         ) -> Dict[DesignKey, List[Genome]]:
+    """Re-legalized seed genomes per design, nearest neighbors first.
+
+    Every cached entry (winner and frontier points alike) whose design
+    exists for ``wl`` contributes its genome, re-legalized against the
+    new bounds — with ``divisors_only`` the re-legalization snaps to
+    divisors too, so a constrained search never receives an illegal
+    seed.  Entries whose loop structure does not match (defensive:
+    family collisions cannot happen, but records are on-disk data) are
+    skipped.
+    """
+    out: Dict[DesignKey, List[Genome]] = {}
+    seen: Dict[DesignKey, set] = {}
+    loop_names = set(wl.loop_names)
+    for _, rec in neighbors:
+        for entry in [rec.best] + list(rec.pareto):
+            if set(entry["genome"]) != loop_names:
+                continue
+            dataflow, perm = _entry_design(entry)
+            key = design_key(dataflow, perm)
+            if len(out.get(key, ())) >= max_per_design:
+                continue
+            space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
+            g = space.legalize(_entry_genome(entry))
+            gk = g.key()
+            if gk in seen.setdefault(key, set()):
+                continue
+            seen[key].add(gk)
+            out.setdefault(key, []).append(g)
+    return out
+
+
+def transfer_seeds(store: RegistryStore, fp: Fingerprint, wl: Workload,
+                   k: int = 3, max_distance: float = 4.0,
+                   divisors_only: bool = False
+                   ) -> Dict[DesignKey, List[Genome]]:
+    """Warm-start seeds for ``wl`` from its nearest cached neighbors."""
+    neighbors = store.neighbors(fp, k=k, max_distance=max_distance)
+    return seeds_from_neighbors(neighbors, wl, divisors_only=divisors_only)

@@ -1,5 +1,5 @@
-from .engine import ServeConfig, ServingEngine, build_prefill_step, \
-    build_decode_step
+from .engine import (ServeConfig, ServingEngine, build_prefill_step,
+                     build_decode_step, model_gemm_shapes)
 
 __all__ = ["ServeConfig", "ServingEngine", "build_prefill_step",
-           "build_decode_step"]
+           "build_decode_step", "model_gemm_shapes"]

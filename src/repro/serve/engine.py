@@ -4,12 +4,17 @@
 ``max_batch``, runs one jit'd prefill per admission wave and one jit'd
 decode step per token.  The step builders are also what the dry-run lowers
 for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells.
+
+Engines can consult a :class:`repro.registry.TuningService`: at
+construction the model's core GEMM shapes are resolved through the
+shared design registry, so a fleet of replicas tunes each kernel once
+(first replica searches, the rest do pure lookups) — see DESIGN.md §9.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +28,30 @@ class ServeConfig:
     max_batch: int = 8
     max_seq: int = 256
     eos_token: int = 0
+
+
+def model_gemm_shapes(mcfg, cfg: "ServeConfig") -> List[Tuple[int, int, int]]:
+    """The (M, N, K) GEMMs a serving step issues, prefill and decode.
+
+    M is the token-parallel dim: ``max_batch * max_seq`` at prefill,
+    ``max_batch`` at decode; N/K walk the projection, MLP and LM-head
+    weights.  Degenerate dims (e.g. ``d_ff == 0`` on pure-SSM configs)
+    are skipped.
+    """
+    shapes: List[Tuple[int, int, int]] = []
+    for M in (cfg.max_batch * cfg.max_seq, cfg.max_batch):
+        shapes += [
+            (M, mcfg.d_model, mcfg.d_model),      # QKV / output projections
+            (M, mcfg.d_ff, mcfg.d_model),         # MLP up
+            (M, mcfg.d_model, mcfg.d_ff),         # MLP down
+            (M, mcfg.vocab_size, mcfg.d_model),   # LM head
+        ]
+    seen, out = set(), []
+    for s in shapes:
+        if min(s) > 0 and s not in seen:
+            seen.add(s)
+            out.append(s)
+    return out
 
 
 def build_prefill_step(model: Model) -> Callable:
@@ -59,12 +88,56 @@ def _pad_cache_to(cache: Dict, T: int):
 
 
 class ServingEngine:
-    def __init__(self, model: Model, params, cfg: ServeConfig):
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 tuning=None, tune_evals: int = 800):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.tuning = tuning
+        self.tune_evals = tune_evals
+        self.kernel_configs: Dict[Tuple[int, int, int], object] = {}
+        self.kernel_stats = {"shared": 0, "tuned": 0}
+        if tuning is not None:
+            self._resolve_kernels()
         self.prefill = jax.jit(build_prefill_step(model))
         self.decode = jax.jit(build_decode_step(model))
+
+    def _resolve_kernels(self) -> None:
+        """Resolve block shapes for this engine's GEMMs via the registry.
+
+        Resolution warms the shared store and the process-wide config
+        LRU that ``kernels.matmul.matmul(..., config="auto")`` and
+        :meth:`kernel_config` read.  Note the jit'd prefill/decode steps
+        themselves currently lower through XLA's own GEMMs
+        (``models/layers.py`` uses jnp ops, not the Pallas kernel), so
+        this is provisioning for the Pallas path — callers that issue
+        Pallas matmuls (custom kernels, benchmarks) get tuned shapes
+        with zero search; swapping the model GEMMs onto
+        ``kernels.matmul`` is the remaining step.  Each miss is a fast
+        analytic-model search (tens of ms), so resolving synchronously
+        at construction is cheaper than one jit compile; replicas after
+        the first share everything from disk.
+        """
+        from repro.kernels.autotune import resolve_matmul_config
+        stats: dict = {}
+        for (M, N, K) in model_gemm_shapes(self.model.cfg, self.cfg):
+            self.kernel_configs[(M, N, K)] = resolve_matmul_config(
+                M, N, K, registry=self.tuning.store, evals=self.tune_evals,
+                stats=stats)
+        self.kernel_stats = {
+            "shared": stats.get("disk_hits", 0) + stats.get("lru_hits", 0),
+            "tuned": stats.get("tuned", 0)}
+
+    def kernel_config(self, M: int, N: int, K: int):
+        """Tuned MatmulConfig for an ad-hoc GEMM shape (LRU -> registry)."""
+        cfg = self.kernel_configs.get((M, N, K))
+        if cfg is None:
+            from repro.kernels.autotune import resolve_matmul_config
+            store = self.tuning.store if self.tuning is not None else None
+            cfg = resolve_matmul_config(M, N, K, registry=store,
+                                        evals=self.tune_evals)
+            self.kernel_configs[(M, N, K)] = cfg
+        return cfg
 
     def generate(self, prompts: List[np.ndarray],
                  max_new_tokens: int = 32) -> List[np.ndarray]:

@@ -116,3 +116,28 @@ def test_tpu_autotune_identical_through_batch_path():
     assert a.best == b.best
     assert a.best_fitness == b.best_fitness
     assert a.evals == b.evals
+
+
+def test_evolve_identical_through_batched_legalization():
+    """The batched-repair hooks (raw mutate/crossover + one legalize_batch
+    per generation) draw the same RNG stream and produce bit-identical
+    results to per-child legalization."""
+    wl = matmul(512, 512, 512)
+    perm = [p for p in pruned_permutations(wl) if set(p.inner) == {"k"}][0]
+    model = PerformanceModel(build_descriptor(wl, ("i", "j"), perm), U250)
+    space = GenomeSpace(wl, ("i", "j"))
+    cfg = EvoConfig(epochs=25, population=32, seed=7)
+
+    class ScalarRepair(TilingProblem):
+        mutate_raw = None
+        crossover_raw = None
+        finalize_batch = None
+
+    batched = evolve(TilingProblem(space, model), cfg)
+    scalar = evolve(ScalarRepair(space, model), cfg)
+
+    assert batched.best.key() == scalar.best.key()
+    assert batched.best_fitness == scalar.best_fitness
+    assert batched.evals == scalar.evals
+    assert [t.best_fitness for t in batched.trace] == \
+        [t.best_fitness for t in scalar.trace]

@@ -93,3 +93,32 @@ def test_legalize_clamps_overbound_tiles_with_level2():
     # legalize is idempotent on already-legal genomes
     g3 = space.legalize(g)
     assert g3.triples == g.triples
+
+
+def test_legalize_batch_bit_equal_and_idempotent():
+    """The vectorized legalizer is bit-equal to mapping the scalar path,
+    and idempotent (elites re-enter it every generation)."""
+    from repro.core import cnn_validation
+
+    for wl, df in ((matmul(1024, 1024, 1024), ("i", "j")),
+                   (matmul(10, 10, 10), ("i",)),
+                   (cnn_validation(), ("o", "h"))):
+        space = GenomeSpace(wl, df)
+        rng = random.Random(0)
+        raws = [space.mutate(space.sample(rng), rng, 0.4, legalize=False)
+                for _ in range(300)]
+        batch = space.legalize_batch(raws)
+        for raw, got in zip(raws, batch):
+            assert space.legalize(raw).key() == got.key()
+        for legal, again in zip(batch, space.legalize_batch(batch)):
+            assert legal.key() == again.key()
+
+
+def test_legalize_batch_divisors_only_falls_back_to_scalar():
+    wl = matmul(48, 48, 48)
+    space = GenomeSpace(wl, ("i", "j"), divisors_only=True)
+    rng = random.Random(1)
+    raws = [space.mutate(space.sample(rng), rng, 0.4, legalize=False)
+            for _ in range(50)]
+    for raw, got in zip(raws, space.legalize_batch(raws)):
+        assert space.legalize(raw).key() == got.key()
