@@ -24,11 +24,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (paper_mm, paper_cnn, registry_warmstart, roofline,
-                   search_speed)
+                   search_speed, serving_throughput)
 
     benches = [
         ("search_speed", search_speed.bench_search_speed),
         ("registry_warmstart", registry_warmstart.bench_registry_warmstart),
+        ("serving_throughput", serving_throughput.bench_serving_throughput),
         ("table2", paper_mm.bench_table2),
         ("fig1_fig15", paper_mm.bench_fig1_fig15),
         ("table3", paper_mm.bench_table3),

@@ -82,6 +82,36 @@ def main() -> None:
           f"(inspect with: python -m repro.registry list --root "
           f"{os.path.relpath(REGISTRY_DIR)})")
 
+    serving_demo()
+
+
+def serving_demo() -> None:
+    """Continuous batching vs the wave barrier (DESIGN.md §10).
+
+    A mixed stream — mostly short EOS-terminated replies plus a long
+    tail — through both schedulers.  The wave engine makes every request
+    wait for the slowest in its admission wave; the continuous engine
+    recycles each decode slot at EOS, so the same requests finish in far
+    fewer decode steps.  (The deterministic forced-EOS stub model keeps
+    this instant; swap in `build_model(get_smoke_config(...))` and real
+    prompts for an actual LM — the engines are model-agnostic.)
+    """
+    from repro.serve import ServeConfig, make_engine
+    from repro.serve.sim import countdown_model, poisson_requests
+
+    print("\nserving: continuous batching vs wave barrier "
+          "(mixed EOS-terminated lengths, 4 slots)")
+    model = countdown_model(vocab_size=64)
+    params = model.init(None)
+    cfg = ServeConfig(max_batch=4, max_seq=128, eos_token=0,
+                      prefill_chunk=16)
+    requests = poisson_requests(16, rate_rps=0, vocab_size=64,
+                                max_new_tokens=64, seed=0)
+    for scheduler in ("wave", "continuous"):
+        eng = make_engine(scheduler, model, params, cfg)
+        _, stats = eng.serve([r for r in requests])
+        print(f"  {stats.summary()}")
+
 
 # The process-pool engine uses the spawn context (fork is unsafe once jax's
 # threads exist), and spawn re-imports __main__ in each worker — so the

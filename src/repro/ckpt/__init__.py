@@ -1,5 +1,6 @@
 from .checkpoint import (save_checkpoint, restore_checkpoint,
-                         latest_checkpoint, AsyncCheckpointer)
+                         restore_params, latest_checkpoint,
+                         AsyncCheckpointer)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_checkpoint",
-           "AsyncCheckpointer"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_params",
+           "latest_checkpoint", "AsyncCheckpointer"]

@@ -22,12 +22,16 @@ import numpy as np
 SEP = "::"
 
 
+def _leaf_name(path) -> str:
+    return SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
     for path, leaf in flat:
-        name = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
+        name = _leaf_name(path)
         a = np.asarray(jax.device_get(leaf))
         if a.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
             a = a.astype(np.float32)  # npz cannot store ml_dtypes; lossless
@@ -39,8 +43,7 @@ def _unflatten_into(tree_like, arrays: Dict[str, np.ndarray]):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
     for path, leaf in flat:
-        name = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
+        name = _leaf_name(path)
         if name not in arrays:
             raise KeyError(f"checkpoint missing {name}")
         a = arrays[name]
@@ -88,6 +91,32 @@ def restore_checkpoint(path: str, state_like: Any,
         return jax.tree.map(jax.numpy.asarray, host_state)
     return jax.tree.map(
         lambda a, s: jax.device_put(a, s), host_state, shardings)
+
+
+def restore_params(path: str, params_like: Any) -> Any:
+    """Restore only the model-parameter subtree of a training checkpoint.
+
+    Training states are saved as ``{"params": ..., "opt_state": ..., ...}``;
+    serving only needs the params, so this reads the ``params::``-prefixed
+    arrays and restores them into the structure of ``params_like``.  A
+    checkpoint that lacks some params (e.g. written by an older/different
+    architecture) raises a ``ValueError`` naming every missing param instead
+    of a bare ``KeyError`` on the first one.
+    """
+    prefix = "params" + SEP
+    with np.load(os.path.join(path, "state.npz")) as z:
+        arrays = {k[len(prefix):]: z[k] for k in z.files
+                  if k.startswith(prefix)}
+    want = [_leaf_name(p) for p, _ in
+            jax.tree_util.tree_flatten_with_path(params_like)[0]]
+    missing = sorted(n for n in want if n not in arrays)
+    if missing:
+        raise ValueError(
+            f"checkpoint {path} missing param(s): {', '.join(missing)} "
+            f"(has {len(arrays)} params; was it written by a different "
+            f"architecture?)")
+    return jax.tree.map(jax.numpy.asarray,
+                        _unflatten_into(params_like, arrays))
 
 
 def restore_meta(path: str) -> Dict:

@@ -43,16 +43,18 @@ def random_search(space: GenomeSpace, model: PerformanceModel,
     t0 = time.perf_counter()
     best, best_f = None, -math.inf
     trace: List[TraceEntry] = []
+    evals = 0  # actual fitness evaluations: the time budget may break early
     for i in range(max_evals):
         if time_budget_s and time.perf_counter() - t0 > time_budget_s:
             break
         g = space.sample(rng)
         f = model.fitness(g)
+        evals += 1
         if f > best_f:
             best, best_f = g, f
         if i % 50 == 0:
             trace.append(TraceEntry(i + 1, time.perf_counter() - t0, best_f))
-    return _mk_result(best, best_f, max_evals, t0, trace)
+    return _mk_result(best, best_f, evals, t0, trace)
 
 
 # ---------------------------------------------------------------------- #
@@ -96,12 +98,14 @@ def simulated_annealing(space: GenomeSpace, model: PerformanceModel,
     cur_f = model.fitness(cur)
     best, best_f = cur, cur_f
     trace: List[TraceEntry] = []
+    evals = 1  # the initial sample; the time budget may break early
     for i in range(max_evals):
         if time_budget_s and time.perf_counter() - t0 > time_budget_s:
             break
         t = temperature * (1.0 - i / max_evals) + 1e-6
         cand = space.mutate(cur, rng, alpha=0.4)
         f = model.fitness(cand)
+        evals += 1
         # fitness is -cycles; normalize the scale for the acceptance test
         scale = abs(best_f) + 1e-9
         if f >= cur_f or rng.random() < math.exp((f - cur_f) / scale / t * 1e3):
@@ -110,7 +114,7 @@ def simulated_annealing(space: GenomeSpace, model: PerformanceModel,
             best, best_f = cand, f
         if i % 50 == 0:
             trace.append(TraceEntry(i + 1, time.perf_counter() - t0, best_f))
-    return _mk_result(best, best_f, max_evals, t0, trace)
+    return _mk_result(best, best_f, evals, t0, trace)
 
 
 # ---------------------------------------------------------------------- #

@@ -42,28 +42,46 @@ def _mm_cfg(config: Optional[MatmulConfig]) -> MatmulConfig:
     return cfg
 
 
+def _fa_cfg(config: Optional[FlashConfig]) -> FlashConfig:
+    return config or FlashConfig(interpret=_INTERPRET_DEFAULT)
+
+
+def _ssd_cfg(config: Optional[SSDConfig]) -> SSDConfig:
+    return config or SSDConfig(interpret=_INTERPRET_DEFAULT)
+
+
+# The public wrappers resolve the interpret default *outside* jit: the
+# resolved (frozen, hashable) config is the static jit key, so a
+# ``set_interpret_default()`` flip after the first call retraces instead
+# of silently serving the stale mode from the jit cache (a ``config=None``
+# static key would pin whatever ``_INTERPRET_DEFAULT`` held at first trace).
+
 @functools.partial(jax.jit, static_argnames=("config", "out_dtype"))
+def _matmul_jit(a, b, config: MatmulConfig, out_dtype):
+    return matmul(a, b, config, out_dtype=out_dtype)
+
+
 def matmul_op(a: jax.Array, b: jax.Array,
               config: Optional[MatmulConfig] = None,
               out_dtype=None) -> jax.Array:
-    return matmul(a, b, _mm_cfg(config), out_dtype=out_dtype)
+    return _matmul_jit(a, b, _mm_cfg(config), out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "config"))
+def _attention_jit(q, k, v, causal: bool, scale: Optional[float],
+                   config: FlashConfig):
+    return flash_attention(q, k, v, causal=causal, scale=scale, config=config)
+
+
 def attention_op(q: jax.Array, k: jax.Array, v: jax.Array,
                  causal: bool = False, scale: Optional[float] = None,
                  config: Optional[FlashConfig] = None) -> jax.Array:
-    cfg = config or FlashConfig(interpret=_INTERPRET_DEFAULT)
-    return flash_attention(q, k, v, causal=causal, scale=scale, config=cfg)
+    return _attention_jit(q, k, v, causal, scale, _fa_cfg(config))
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
-def conv2d_op(x: jax.Array, w: jax.Array,
-              config: Optional[MatmulConfig] = None) -> jax.Array:
-    """VALID conv via im2col + the tunable Pallas matmul.
-
-    x: (N, H, W, Ci); w: (P, Q, Ci, Co) -> (N, H-P+1, W-Q+1, Co).
-    """
+def _conv2d_jit(x: jax.Array, w: jax.Array,
+                config: MatmulConfig) -> jax.Array:
     N, H, W, Ci = x.shape
     P, Q, _, Co = w.shape
     Ho, Wo = H - P + 1, W - Q + 1
@@ -75,14 +93,26 @@ def conv2d_op(x: jax.Array, w: jax.Array,
                 x, (0, p, q, 0), (N, Ho, Wo, Ci)))
     patches = jnp.stack(cols, axis=3).reshape(N * Ho * Wo, P * Q * Ci)
     wmat = w.reshape(P * Q * Ci, Co)
-    out = matmul(patches, wmat, _mm_cfg(config))
+    out = matmul(patches, wmat, config)
     return out.reshape(N, Ho, Wo, Co)
 
 
+def conv2d_op(x: jax.Array, w: jax.Array,
+              config: Optional[MatmulConfig] = None) -> jax.Array:
+    """VALID conv via im2col + the tunable Pallas matmul.
+
+    x: (N, H, W, Ci); w: (P, Q, Ci, Co) -> (N, H-P+1, W-Q+1, Co).
+    """
+    return _conv2d_jit(x, w, _mm_cfg(config))
+
+
 @functools.partial(jax.jit, static_argnames=("config",))
+def _ssd_chunk_jit(x, a, b, c, h0, config: SSDConfig):
+    return ssd_chunk(x, a, b, c, h0=h0, config=config)
+
+
 def ssd_chunk_op(x, a, b, c, h0=None, config: Optional[SSDConfig] = None):
-    cfg = config or SSDConfig(interpret=_INTERPRET_DEFAULT)
-    return ssd_chunk(x, a, b, c, h0=h0, config=cfg)
+    return _ssd_chunk_jit(x, a, b, c, h0, _ssd_cfg(config))
 
 
 __all__ = ["matmul_op", "attention_op", "conv2d_op", "ssd_chunk_op",

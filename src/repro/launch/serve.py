@@ -1,20 +1,25 @@
-"""Serving launcher: load a checkpoint (or init), batch requests, decode.
+"""Serving launcher: load a checkpoint (or init), schedule requests, decode.
 
 ``python -m repro.launch.serve --arch smollm-135m --smoke --requests 8``
+
+``--scheduler continuous`` (default) admits requests into free decode slots
+mid-stream; ``--scheduler wave`` is the wave-synchronous baseline.
+``--poisson-rate R`` replays a Poisson arrival trace at R requests/sec
+instead of queueing everything at t=0.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import os
 
 import jax
-import numpy as np
 
-from repro.ckpt import latest_checkpoint, restore_checkpoint
+from repro.ckpt import latest_checkpoint, restore_params
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import build_model
-from repro.serve import ServeConfig, ServingEngine
+from repro.serve import SCHEDULERS, ServeConfig, make_engine
+from repro.serve.sim import poisson_requests
 
 
 def main(argv=None):
@@ -25,6 +30,16 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=sorted(SCHEDULERS))
+    ap.add_argument("--eos-token", type=int, default=None,
+                    help="stop decoding at this token id (default: decode "
+                         "the full budget)")
+    ap.add_argument("--poisson-rate", type=float, default=0.0,
+                    help="request arrivals per second (0 = all queued at "
+                         "t=0)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--registry-dir", default=None,
                     help="shared design-registry root; replicas pointing at "
                          "the same dir share tuned kernels (default: "
@@ -37,25 +52,9 @@ def main(argv=None):
     if args.ckpt_dir:
         path = latest_checkpoint(args.ckpt_dir)
         if path:
-            template = jax.eval_shape(
-                lambda: {"params": params})["params"]
-            state_t = jax.eval_shape(lambda: {"params": params,
-                                              "opt_state": {}})
-            # restore params only
-            from repro.ckpt.checkpoint import _flatten  # noqa
-            import numpy as _np
-            with _np.load(path + "/state.npz") as z:
-                arrays = {k.split("params::", 1)[1]: z[k]
-                          for k in z.files if k.startswith("params::")}
-            flat, tdef = jax.tree_util.tree_flatten_with_path(params)
-            leaves = []
-            for p, leaf in flat:
-                name = "::".join(str(getattr(k, "key", k)) for k in p)
-                leaves.append(arrays[name].astype(leaf.dtype))
-            params = jax.tree_util.tree_unflatten(tdef, leaves)
+            params = restore_params(path, params)
             print(f"[serve] restored {path}")
 
-    import os
     tuning = None
     from repro.registry import DEFAULT_ROOT_ENV
     registry_dir = args.registry_dir or os.environ.get(DEFAULT_ROOT_ENV)
@@ -63,24 +62,27 @@ def main(argv=None):
         from repro.registry import RegistryStore, TuningService
         tuning = TuningService(RegistryStore(registry_dir))
 
-    eng = ServingEngine(model, params, ServeConfig(max_batch=args.max_batch),
-                        tuning=tuning)
+    eng = make_engine(args.scheduler, model, params,
+                      ServeConfig(max_batch=args.max_batch,
+                                  max_seq=args.max_seq,
+                                  eos_token=args.eos_token),
+                      tuning=tuning)
     if tuning is not None:
         print(f"[serve] registry {registry_dir}: resolved "
               f"{len(eng.kernel_configs)} GEMM block shapes "
               f"({eng.kernel_stats['shared']} shared from other replicas, "
               f"{eng.kernel_stats['tuned']} tuned here)")
-    rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=rng.integers(2, 8))
-               .astype(np.int32) for _ in range(args.requests)]
-    t0 = time.perf_counter()
-    outs = eng.generate(prompts, max_new_tokens=args.max_new_tokens)
-    dt = time.perf_counter() - t0
-    total = sum(len(o) for o in outs)
-    print(f"served {len(prompts)} requests, {total} tokens "
-          f"in {dt:.2f}s ({total / dt:.1f} tok/s)")
+
+    requests = poisson_requests(args.requests, rate_rps=args.poisson_rate,
+                                vocab_size=cfg.vocab_size,
+                                prompt_len=range(2, 8),
+                                max_new_tokens=args.max_new_tokens,
+                                seed=args.seed)
+    outs, stats = eng.serve(requests)
+    print(stats.summary())
     for i, o in enumerate(outs[:4]):
-        print(f"  req{i}: prompt={prompts[i].tolist()} -> {o.tolist()}")
+        print(f"  req{i}: prompt={requests[i].prompt.tolist()} "
+              f"-> {o.tolist()}")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,16 @@ Every model exposes:
     forward(params, batch)             -> (logits, cache|None)
     loss(params, batch)                -> scalar f32
     init_cache(B, T)                   -> cache pytree
-    decode_step(params, cache, tokens, pos) -> (logits, cache)
+    decode_step(params, cache, tokens, pos, **kw) -> (logits, cache)
+
+Decode-step cache contract (DESIGN.md §10): ``tokens`` is (B, C) — C=1 is
+classic decode, C>1 a chunked-prefill step appending C tokens at cache rows
+[pos, pos+C).  Attention families additionally accept ``kv_start`` (B,), the
+first valid cache row of a left-padded ragged batch, and tolerate garbage
+cache rows beyond the write frontier (padded chunks, parked serving slots).
+SSM/hybrid caches are recurrent state: chunks must be exact-length and
+``kv_start`` only shifts the hybrid's shared-attention cache.
+``Model.supports_ragged`` tells schedulers which contract they may rely on.
 """
 
 from __future__ import annotations
@@ -35,7 +44,10 @@ class Model:
     init: Callable
     forward: Callable                  # (params, batch, want_cache=False)
     init_cache: Callable               # (B, T)
-    decode_step: Callable              # (params, cache, tokens, pos)
+    decode_step: Callable              # (params, cache, tokens, pos, **kw)
+    # True iff the decode/prefill paths honor left-padded ragged batches
+    # (attn_mask in forward, kv_start in decode_step) and padded chunks
+    supports_ragged: bool = False
 
     def loss(self, params, batch) -> jax.Array:
         logits, _ = self.forward(params, batch)
@@ -58,6 +70,7 @@ def build_model(cfg: ModelConfig) -> Model:
         forward=lambda params, batch, want_cache=False:
             mod.forward(cfg, params, batch, want_cache=want_cache),
         init_cache=lambda B, T, **kw: mod.init_cache(cfg, B, T, **kw),
-        decode_step=lambda params, cache, tokens, pos:
-            mod.decode_step(cfg, params, cache, tokens, pos),
+        decode_step=lambda params, cache, tokens, pos, **kw:
+            mod.decode_step(cfg, params, cache, tokens, pos, **kw),
+        supports_ragged=mod is transformer,
     )

@@ -134,8 +134,12 @@ def _repeat_kv(k: jax.Array, group: int) -> jax.Array:
 
 
 def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                   causal: bool) -> jax.Array:
-    """Direct attention.  q: (B, S, H, hd); k/v: (B, T, Hkv, hd)."""
+                   causal: bool,
+                   kv_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Direct attention.  q: (B, S, H, hd); k/v: (B, T, Hkv, hd).
+
+    ``kv_mask``: optional (B, T) bool — False keys (e.g. left-pad rows of a
+    ragged serving batch) are excluded for every query."""
     B, S, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     k = _repeat_kv(k, H // Hkv)
@@ -147,12 +151,15 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         mask = (jnp.arange(T)[None, :]
                 <= jnp.arange(S)[:, None] + (T - S))
         logits = jnp.where(mask[None, None], logits, -1e30)
+    if kv_mask is not None:
+        logits = jnp.where(kv_mask[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     return jnp.einsum("bhst,bthd->bshd", p, v)
 
 
 def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                      causal: bool, block: int = 1024) -> jax.Array:
+                      causal: bool, block: int = 1024,
+                      kv_mask: Optional[jax.Array] = None) -> jax.Array:
     """Flash-style online-softmax attention, scanned over KV blocks.
 
     Peak memory is O(S * block) instead of O(S * T); this is the pure-JAX
@@ -162,7 +169,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     B, S, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     if T <= block:
-        return full_attention(q, k, v, causal)
+        return full_attention(q, k, v, causal, kv_mask=kv_mask)
     group = H // Hkv
     nblk = (T + block - 1) // block
     pad = nblk * block - T
@@ -171,12 +178,17 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     kb = k.reshape(B, nblk, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(B, nblk, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    # kv_mask is a trace-time option: the training path (None) pays no
+    # extra masking work; ragged serving batches thread per-block masks
+    kmb = () if kv_mask is None else (
+        jnp.pad(kv_mask, ((0, 0), (0, pad)))
+        .reshape(B, nblk, block).transpose(1, 0, 2),)     # (nblk, B, block)
     scale = 1.0 / math.sqrt(hd)
     qpos = jnp.arange(S)[:, None] + (T - S)
 
     def step(carry, inp):
         m, l, acc = carry
-        kc, vc, blk = inp
+        kc, vc, blk, *kmc = inp
         kc = _repeat_kv(kc, group)
         vc = _repeat_kv(vc, group)
         s = jnp.einsum("bshd,bthd->bhst", q, kc,
@@ -186,6 +198,8 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         if causal:
             mask = mask & (kpos <= qpos)
         s = jnp.where(mask[None, None], s, -1e30)
+        if kmc:
+            s = jnp.where(kmc[0][:, None, None, :], s, -1e30)
         m_new = jnp.maximum(m, s.max(-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -199,7 +213,7 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     l0 = jnp.zeros((B, H, S), jnp.float32)
     a0 = jnp.zeros((B, H, S, hd), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(
-        step, (m0, l0, a0), (kb, vb, jnp.arange(nblk)))
+        step, (m0, l0, a0), (kb, vb, jnp.arange(nblk)) + kmb)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
@@ -246,11 +260,13 @@ def attn_qkv(p: Params, cfg: ModelConfig, x: jax.Array,
 def attn_forward(p: Params, cfg: ModelConfig, x: jax.Array,
                  positions: jax.Array, causal: bool = True,
                  kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-                 return_kv: bool = False):
+                 return_kv: bool = False,
+                 kv_mask: Optional[jax.Array] = None):
     """Full-sequence attention.  If ``kv`` is given (cross attention), keys/
     values come from it instead of ``x``.  ``x`` may arrive seq-sharded
     (sequence-parallel residual); it is gathered here and the output is
-    scattered back."""
+    scattered back.  ``kv_mask`` (B, T) excludes padding keys (ragged
+    serving batches)."""
     x = sp_gather(x)
     if kv is None:
         q, k, v = attn_qkv(p, cfg, x, positions)
@@ -265,7 +281,7 @@ def attn_forward(p: Params, cfg: ModelConfig, x: jax.Array,
     if return_kv:
         k = shard(k, "batch", "seq", None, None)
         v = shard(v, "batch", "seq", None, None)
-    out = chunked_attention(q, k, v, causal=causal)
+    out = chunked_attention(q, k, v, causal=causal, kv_mask=kv_mask)
     out = out.reshape(out.shape[0], out.shape[1], -1)
     out = sp_scatter(out @ p["wo"])
     if return_kv:
@@ -274,14 +290,31 @@ def attn_forward(p: Params, cfg: ModelConfig, x: jax.Array,
 
 
 def attn_decode(p: Params, cfg: ModelConfig, x: jax.Array,
-                cache_k: jax.Array, cache_v: jax.Array, pos: jax.Array):
-    """One-token decode.  x: (B, 1, d); cache: (B, T, Hkv, hd); pos: (B,)."""
-    B = x.shape[0]
+                cache_k: jax.Array, cache_v: jax.Array, pos: jax.Array,
+                kv_start: Optional[jax.Array] = None):
+    """Incremental attention over a slotted KV cache.
+
+    x: (B, C, d) — C new tokens per row (C=1 is classic decode; C>1 is a
+    chunked-prefill step).  cache: (B, T, Hkv, hd); pos: (B,) cache index
+    the first new token is written at.  ``kv_start``: (B,) first valid
+    cache row (left-pad offset of a ragged wave batch; default 0) — rows
+    before it are masked out and RoPE positions are shifted so that a
+    left-padded row sees exactly the geometry of an unpadded one.
+
+    The new KV is written at cache rows [pos, pos+C); query c attends rows
+    [kv_start, pos+c].  Rows past ``pos+c`` are never read, so a caller may
+    leave garbage beyond its write frontier (padded prefill chunks, parked
+    serving slots) as long as it overwrites row p before pos reaches p.
+    """
+    B, C = x.shape[0], x.shape[1]
     hd = cfg.hd
-    posb = pos[:, None]                                   # (B, 1)
-    q = (x @ p["wq"]).reshape(B, 1, cfg.num_heads, hd)
-    k = (x @ p["wk"]).reshape(B, 1, cfg.num_kv_heads, hd)
-    v = (x @ p["wv"]).reshape(B, 1, cfg.num_kv_heads, hd)
+    if kv_start is None:
+        kv_start = jnp.zeros((B,), jnp.int32)
+    # sequence positions (for RoPE) exclude the left pad; cache indices keep it
+    posb = (pos - kv_start)[:, None] + jnp.arange(C)[None, :]   # (B, C)
+    q = (x @ p["wq"]).reshape(B, C, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(B, C, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, C, cfg.num_kv_heads, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -292,7 +325,7 @@ def attn_decode(p: Params, cfg: ModelConfig, x: jax.Array,
     else:
         q = apply_rope(q, posb, cfg.rope_theta)
         k = apply_rope(k, posb, cfg.rope_theta)
-    # write the new KV at position pos (per batch row)
+    # write the new KV at positions [pos, pos+C) (per batch row)
     upd = jax.vmap(lambda c, s, i: jax.lax.dynamic_update_slice(
         c, s, (i, 0, 0)))
     cache_k = upd(cache_k, k, pos)
@@ -301,17 +334,20 @@ def attn_decode(p: Params, cfg: ModelConfig, x: jax.Array,
     # grouped-GQA einsum: never materialize the head-repeated KV (a
     # jnp.repeat here would expand the whole cache G-fold in HBM)
     G = cfg.num_heads // cfg.num_kv_heads
-    qg = q.reshape(B, 1, cfg.num_kv_heads, G, hd)
+    qg = q.reshape(B, C, cfg.num_kv_heads, G, hd)
     scale = 1.0 / math.sqrt(hd)
     logits = jnp.einsum("bskgd,btkd->bkgst", qg, cache_k,
                         preferred_element_type=jnp.float32) * scale
-    mask = jnp.arange(T)[None, :] <= pos[:, None]         # (B, T)
-    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    tpos = jnp.arange(T)[None, None, :]
+    wpos = pos[:, None] + jnp.arange(C)[None, :]                # (B, C)
+    mask = (tpos <= wpos[:, :, None]) \
+        & (tpos >= kv_start[:, None, None])                     # (B, C, T)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
     logits = shard(logits, "batch", None, None, None, "seq")
     pr = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", pr.astype(cache_v.dtype),
                      cache_v, preferred_element_type=jnp.float32)
-    out = out.astype(x.dtype).reshape(B, 1, -1) @ p["wo"]
+    out = out.astype(x.dtype).reshape(B, C, -1) @ p["wo"]
     return out, cache_k, cache_v
 
 

@@ -146,13 +146,20 @@ def init_cache(cfg: ModelConfig, B: int, T: int, dtype=jnp.bfloat16):
     return cache
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
-    x = jnp.take(params["embed"], tokens, axis=0)        # (B, 1, d)
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                kv_start=None):
+    """tokens: (B, C) — C=1 decode, C>1 a chunked-prefill step (the SSD
+    recurrence carries the state chunk-to-chunk, so chunks must be exact:
+    unlike the attention families there is no padded-chunk contract).
+    ``kv_start`` only shifts the hybrid's shared-attention cache; the SSM
+    state itself cannot skip left-pad rows."""
+    x = jnp.take(params["embed"], tokens, axis=0)        # (B, C, d)
     period = cfg.hybrid_attn_period
+    one_tok = tokens.shape[1] == 1
 
     def mamba_step(lp, x, st):
         h, st = L.mamba_forward(lp["mixer"], cfg, L.rmsnorm(x, lp["ln"]),
-                                state=st, decode=True)
+                                state=st, decode=one_tok)
         return x + h, st
 
     if period:
@@ -171,7 +178,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
                 new_conv.append(st["conv"])
             h, ck, cv = L.attn_decode(shared["attn"], cfg,
                                       L.rmsnorm(x, shared["ln1"]), ck, cv,
-                                      pos)
+                                      pos, kv_start=kv_start)
             x = x + h
             x = x + L.mlp_forward(shared["mlp"], cfg,
                                   L.rmsnorm(x, shared["ln2"]))

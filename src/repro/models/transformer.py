@@ -62,13 +62,15 @@ def init_params(cfg: ModelConfig, key) -> Dict:
     return params
 
 
-def _group_fwd(cfg: ModelConfig, gp: Dict, x, positions, causal: bool):
+def _group_fwd(cfg: ModelConfig, gp: Dict, x, positions, causal: bool,
+               kv_mask=None):
     per = cfg.moe_interleave if cfg.moe_experts else 1
     kvs = []
     for i in range(per):
         lp = gp[f"l{i}"]
         h, kv = L.attn_forward(lp["attn"], cfg, L.rmsnorm(x, lp["ln1"]),
-                               positions, causal=causal, return_kv=True)
+                               positions, causal=causal, return_kv=True,
+                               kv_mask=kv_mask)
         x = x + h
         kvs.append(kv)
         y = L.rmsnorm(x, lp["ln2"])
@@ -106,14 +108,19 @@ def _logits(cfg: ModelConfig, params, x) -> jax.Array:
 
 
 def forward(cfg: ModelConfig, params, batch, want_cache: bool = False):
-    """Full-sequence forward.  Returns (logits, cache|None)."""
+    """Full-sequence forward.  Returns (logits, cache|None).
+
+    ``batch`` may carry ``positions`` (per-row RoPE positions) and
+    ``attn_mask`` (B, S) bool — False marks left-pad rows of a ragged
+    serving batch, excluded as attention keys for every query."""
     x = _embed_input(cfg, params, batch)
     B, S, _ = x.shape
     x = shard(x, "batch", "seq", None)
     positions = _positions(cfg, batch, B, S)
 
     body = functools.partial(_group_fwd, cfg, causal=True,
-                             positions=positions)
+                             positions=positions,
+                             kv_mask=batch.get("attn_mask"))
 
     def scan_body(carry, gp):
         x = carry
@@ -139,10 +146,14 @@ def init_cache(cfg: ModelConfig, B: int, T: int, dtype=jnp.bfloat16):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
-    """tokens: (B, 1) int32; pos: (B,) current positions.
-    Returns (logits (B, 1, V), updated cache)."""
-    x = jnp.take(params["embed"], tokens, axis=0)         # (B, 1, d)
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos,
+                kv_start=None):
+    """tokens: (B, C) int32 — C=1 is classic decode, C>1 a chunked-prefill
+    step; pos: (B,) cache index of the first new token; ``kv_start``: (B,)
+    first valid cache row (left-pad offset of a ragged wave batch).
+    Returns (logits (B, C, V), updated cache) — see layers.attn_decode for
+    the cache-frontier contract."""
+    x = jnp.take(params["embed"], tokens, axis=0)         # (B, C, d)
     per = cfg.moe_interleave if cfg.moe_experts else 1
     G = cfg.num_layers // per
     ck = cache["k"].reshape((G, per) + cache["k"].shape[1:])
@@ -155,7 +166,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
             lp = gp[f"l{i}"]
             h, k_upd, v_upd = L.attn_decode(
                 lp["attn"], cfg, L.rmsnorm(x, lp["ln1"]),
-                ck_g[i], cv_g[i], pos)
+                ck_g[i], cv_g[i], pos, kv_start=kv_start)
             x = x + h
             new_k.append(k_upd)
             new_v.append(v_upd)

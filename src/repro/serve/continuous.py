@@ -1,0 +1,261 @@
+"""Continuous batching: slot-based scheduling over a fixed-capacity KV cache.
+
+The wave engine's barrier (every request waits for the slowest in its wave)
+is the serving analog of the pruned design spaces the Odyssey paper
+quantifies: convenient, but it idles compute slots on synchronization.
+This engine removes it (DESIGN.md §10):
+
+  * ``max_batch`` **decode slots** back a single batched cache of capacity
+    ``max_seq`` per slot; a request occupies one slot from admission to its
+    EOS/budget, then the slot is recycled for the next queued request
+    mid-stream — no wave barrier;
+  * **chunked prefill**: prompts enter the slot cache ``prefill_chunk``
+    tokens per scheduler tick through the model's chunked decode step, so a
+    long prompt never stalls decode of the other slots for more than one
+    chunk;
+  * the decode tick always runs the full slot batch; free/prefilling slots
+    are *parked* — fed a dummy token with their write index pinned to the
+    last cache row, which the cache-frontier contract
+    (``layers.attn_decode``) makes invisible: a parked write is overwritten
+    before any query can attend it.  Parked rows cost FLOPs, not
+    correctness — the slot count trades that against admission latency;
+  * per-request queue wait / TTFT / decode tok/s land in a
+    :class:`repro.serve.ServeStats` report.
+
+Mid-prefill slots keep their chunk cache aside and splice it into the
+batched cache only when the prompt completes, so decode ticks in between
+cannot pollute recurrent (SSM/conv) state; attention-family models prefill
+through fixed-size padded chunks (one jit trace), recurrent families through
+exact-length chunks (the SSD scan cannot mask padding out of its state).
+
+The hot loop is one fused jit dispatch per tick (decode + argmax + position
+advance, see ``EngineBase.decode_tick``) plus a single device->host sync
+for the harvested tokens; slot splices and decode inputs are rebuilt only
+when slot membership changes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import EngineBase
+from .stats import Request, RequestMetrics, ServeStats
+
+
+class _Slot:
+    """Host-side bookkeeping for one decode slot."""
+
+    def __init__(self, index: int):
+        self.index = index
+        self.state = "free"               # free | prefill | decode
+        self.req: Optional[Request] = None
+        self.req_idx = -1                 # input position of self.req
+        self.pos = 0                      # cache rows written so far
+        self.chunks: List[np.ndarray] = []  # pending prompt chunks
+        self.cache: Optional[Dict] = None   # private cache while prefilling
+        self.gen: List[int] = []
+        self.admit_s = 0.0
+        self.first_s = 0.0
+
+
+class ContinuousServingEngine(EngineBase):
+    """Slot scheduler: admit requests into free decode slots mid-stream."""
+
+    scheduler = "continuous"
+
+    def __init__(self, model, params, cfg, tuning=None, tune_evals: int = 800):
+        super().__init__(model, params, cfg, tuning=tuning,
+                         tune_evals=tune_evals)
+        self._cache_dtype = jnp.float32 \
+            if getattr(model.cfg, "dtype", "bfloat16") == "float32" \
+            else jnp.bfloat16
+        # padded fixed-size chunks need the attention cache-frontier
+        # contract; recurrent state (SSM/conv) must see exact tokens only
+        self._padded_chunks = model.supports_ragged
+        self._chunk_fns: Dict[int, object] = {}
+        # splice a one-slot cache into the batch cache (slot axis is 1 on
+        # every leaf); the slot index is a traced arg — one compile total
+        self._insert_fn = jax.jit(
+            lambda cache, slot, s: {
+                k: jax.lax.dynamic_update_slice_in_dim(cache[k], slot[k],
+                                                       s, axis=1)
+                for k in cache})
+
+    # ------------------------------------------------------------------ #
+    def _chunk_fn(self, C: int):
+        """jit'd chunked prefill step for chunk length C: greedy next
+        tokens (1, C) + updated slot cache (one trace per C; the padded
+        path only ever uses C = cfg.prefill_chunk)."""
+        if C not in self._chunk_fns:
+            model = self.model
+
+            def chunk(params, cache, tokens, pos):
+                logits, cache = model.decode_step(params, cache, tokens, pos)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+            self._chunk_fns[C] = jax.jit(chunk)
+        return self._chunk_fns[C]
+
+    def _chunks_of(self, prompt: np.ndarray) -> List[np.ndarray]:
+        C = self.cfg.prefill_chunk
+        if not self._padded_chunks:
+            return [prompt[i:i + C] for i in range(0, len(prompt), C)]
+        out = []
+        for i in range(0, len(prompt), C):
+            part = prompt[i:i + C]
+            if len(part) < C:  # pad to the fixed trace length; the pad rows
+                part = np.pad(part, (0, C - len(part)))  # are never attended
+            out.append(part)
+        return out
+
+    def _writes_needed(self, plen: int) -> int:
+        C = self.cfg.prefill_chunk
+        return ((plen + C - 1) // C) * C if self._padded_chunks else plen
+
+    # ------------------------------------------------------------------ #
+    def serve(self, requests: List[Request]
+              ) -> Tuple[List[np.ndarray], ServeStats]:
+        cfg = self.cfg
+        S, T = cfg.max_batch, cfg.max_seq
+        for r in requests:
+            need = max(self._writes_needed(len(r.prompt)),
+                       len(r.prompt) + r.max_new_tokens)
+            if need > T:
+                raise ValueError(
+                    f"request needs {need} cache rows "
+                    f"(prompt {len(r.prompt)} + {r.max_new_tokens} new) "
+                    f"> max_seq={T}")
+        t0 = time.perf_counter()
+        queue = self._sorted_queue(requests)
+        cache = self.model.init_cache(S, T, dtype=self._cache_dtype)
+        # every admission starts from this (immutable) empty one-slot cache
+        fresh_slot = self.model.init_cache(1, T, dtype=self._cache_dtype)
+        slots = [_Slot(s) for s in range(S)]
+        outs: List[Optional[np.ndarray]] = [None] * len(requests)
+        metrics: List[Tuple[int, RequestMetrics]] = []
+        decode_steps = prefill_chunks = 0
+        eos = cfg.eos_token
+
+        # device-resident decode inputs: rebuilt from the host mirrors only
+        # when slot membership changes (admission/finish), advanced inside
+        # the fused tick between — the steady-state tick does a single D2H
+        # transfer (the harvested tokens)
+        kv0 = jnp.zeros((S,), jnp.int32)
+        cur_host = np.zeros(S, np.int32)
+        pos_host = np.full(S, T - 1, np.int32)   # parked rows: see module doc
+        cur_dev = pos_dev = step_dev = None
+        membership_dirty = True
+
+        def finish(slot: _Slot, reason: str, now_s: float):
+            nonlocal membership_dirty
+            req = slot.req
+            outs[slot.req_idx] = np.array(slot.gen, np.int32)
+            metrics.append((slot.req_idx, RequestMetrics(
+                request_id=req.request_id, prompt_len=len(req.prompt),
+                new_tokens=len(slot.gen),
+                queue_wait_s=slot.admit_s - req.arrival_s,
+                ttft_s=slot.first_s - req.arrival_s,
+                decode_s=now_s - slot.first_s,
+                finish_reason=reason)))
+            slot.state, slot.req, slot.gen = "free", None, []
+            pos_host[slot.index] = T - 1
+            membership_dirty = True
+
+        while queue or any(s.state != "free" for s in slots):
+            now = time.perf_counter() - t0
+            # --- admission: recycle free slots from the arrived queue --- #
+            for slot in slots:
+                if slot.state != "free" or not queue \
+                        or queue[0][1].arrival_s > now:
+                    continue
+                slot.req_idx, slot.req = queue.popleft()
+                slot.state = "prefill"
+                slot.pos = 0
+                slot.chunks = self._chunks_of(slot.req.prompt)
+                slot.cache = fresh_slot
+                slot.admit_s = now
+            if all(s.state == "free" for s in slots):
+                # queue is non-empty but nothing has arrived yet
+                time.sleep(max(0.0, queue[0][1].arrival_s
+                               - (time.perf_counter() - t0)))
+                continue
+
+            # --- one prefill chunk per mid-prefill slot (keeps long --- #
+            # --- prompts from stalling the decode of other slots)   --- #
+            for slot in slots:
+                if slot.state != "prefill":
+                    continue
+                chunk = slot.chunks.pop(0)
+                fn = self._chunk_fn(len(chunk))
+                toks, slot.cache = fn(
+                    self.params, slot.cache,
+                    jnp.asarray(chunk[None, :].astype(np.int32)),
+                    jnp.asarray([slot.pos], jnp.int32))
+                slot.pos += len(chunk)
+                prefill_chunks += 1
+                if slot.chunks:
+                    continue
+                # prompt complete: splice the private cache into the batch
+                # cache and take the first generated token from the last
+                # real prompt row of this chunk
+                plen = len(slot.req.prompt)
+                # last *real* prompt row of this final chunk: padded chunks
+                # have fixed length C, exact chunks end at their last row
+                last_row = (plen - 1) % len(chunk) if self._padded_chunks \
+                    else len(chunk) - 1
+                first = int(np.asarray(toks)[0, last_row])
+                cache = self._insert_fn(cache, slot.cache,
+                                        jnp.int32(slot.index))
+                slot.cache = None
+                slot.pos = plen          # decode writes resume at plen
+                slot.gen = [first]
+                slot.first_s = time.perf_counter() - t0
+                if eos is not None and first == eos:
+                    finish(slot, "eos", slot.first_s)
+                elif slot.req.max_new_tokens == 1:
+                    finish(slot, "length", slot.first_s)
+                else:
+                    slot.state = "decode"
+                    cur_host[slot.index] = first
+                    pos_host[slot.index] = plen
+                    membership_dirty = True
+
+            # --- one fused decode tick over the full slot batch --- #
+            if not any(s.state == "decode" for s in slots):
+                continue
+            if membership_dirty:
+                cur_dev = jnp.asarray(cur_host[:, None])
+                pos_dev = jnp.asarray(pos_host)
+                step_host = np.array([1 if s.state == "decode" else 0
+                                      for s in slots], np.int32)
+                step_dev = jnp.asarray(step_host)
+                membership_dirty = False
+            cur_dev, pos_dev, cache = self.decode_tick(
+                self.params, cache, cur_dev, pos_dev, step_dev, kv0)
+            decode_steps += 1
+            # writable host mirror (np.asarray of a jax array is read-only)
+            cur_host = np.array(cur_dev)[:, 0]
+            pos_host += step_host
+            now_s = time.perf_counter() - t0
+            for slot in slots:
+                if slot.state != "decode":
+                    continue
+                tok = int(cur_host[slot.index])
+                slot.gen.append(tok)
+                slot.pos += 1
+                if eos is not None and tok == eos:
+                    finish(slot, "eos", now_s)
+                elif len(slot.gen) >= slot.req.max_new_tokens:
+                    finish(slot, "length", now_s)
+
+        stats = ServeStats(scheduler=self.scheduler,
+                           requests=[m for _, m in sorted(metrics)],
+                           wall_s=time.perf_counter() - t0,
+                           decode_steps=decode_steps,
+                           prefill_chunks=prefill_chunks)
+        return outs, stats

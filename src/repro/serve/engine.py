@@ -1,9 +1,16 @@
 """Batched serving: prefill + greedy decode over a fixed-capacity KV cache.
 
-``ServingEngine`` is the host-side loop: it admits requests up to
-``max_batch``, runs one jit'd prefill per admission wave and one jit'd
-decode step per token.  The step builders are also what the dry-run lowers
-for the ``prefill_*`` / ``decode_*`` / ``long_*`` shape cells.
+Two schedulers share this module's plumbing (DESIGN.md §10):
+
+  * :class:`ServingEngine` — **wave** batching: admits up to ``max_batch``
+    arrived requests, left-pads them into one prefill, and decodes the wave
+    until every member has finished (EOS or its token budget).  The wave
+    barrier is the baseline the continuous engine is measured against.
+  * :class:`repro.serve.continuous.ContinuousServingEngine` — slot-based
+    continuous batching (no wave barrier; see that module).
+
+The step builders are also what the dry-run lowers for the ``prefill_*`` /
+``decode_*`` / ``long_*`` shape cells.
 
 Engines can consult a :class:`repro.registry.TuningService`: at
 construction the model's core GEMM shapes are resolved through the
@@ -14,6 +21,8 @@ shared design registry, so a fleet of replicas tunes each kernel once
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -22,12 +31,18 @@ import numpy as np
 
 from repro.models.api import Model
 
+from .stats import Request, RequestMetrics, ServeStats, as_requests
+
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8
-    max_seq: int = 256
-    eos_token: int = 0
+    max_batch: int = 8          # wave width / continuous decode-slot count
+    max_seq: int = 256          # KV-cache capacity per slot (continuous)
+    # EOS token id; None disables EOS stopping (0 is a valid vocab id).
+    # When set, generation stops at the first EOS and the returned sequence
+    # is truncated to end with it.
+    eos_token: Optional[int] = None
+    prefill_chunk: int = 32     # continuous: tokens prefilled per tick
 
 
 def model_gemm_shapes(mcfg, cfg: "ServeConfig") -> List[Tuple[int, int, int]]:
@@ -87,7 +102,11 @@ def _pad_cache_to(cache: Dict, T: int):
     return {k: (pad(v) if k in ("k", "v") else v) for k, v in cache.items()}
 
 
-class ServingEngine:
+class EngineBase:
+    """Shared plumbing: jit'd steps + registry-tuned GEMM resolution."""
+
+    scheduler = "base"
+
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  tuning=None, tune_evals: int = 800):
         self.model = model
@@ -100,7 +119,20 @@ class ServingEngine:
         if tuning is not None:
             self._resolve_kernels()
         self.prefill = jax.jit(build_prefill_step(model))
-        self.decode = jax.jit(build_decode_step(model))
+
+        # one fused greedy tick: decode + argmax + position advance in a
+        # single dispatch (the schedulers' hot loop makes one host sync per
+        # tick — the harvested tokens — and nothing else)
+        def tick(params, cache, tokens, pos, step, kv_start):
+            if model.supports_ragged:
+                logits, cache = model.decode_step(params, cache, tokens,
+                                                  pos, kv_start=kv_start)
+            else:
+                logits, cache = model.decode_step(params, cache, tokens, pos)
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+            return nxt, pos + step, cache
+
+        self.decode_tick = jax.jit(tick)
 
     def _resolve_kernels(self) -> None:
         """Resolve block shapes for this engine's GEMMs via the registry.
@@ -139,32 +171,142 @@ class ServingEngine:
             self.kernel_configs[(M, N, K)] = cfg
         return cfg
 
+    # ------------------------------------------------------------------ #
     def generate(self, prompts: List[np.ndarray],
                  max_new_tokens: int = 32) -> List[np.ndarray]:
-        """Greedy generation for a wave of equal-priority requests."""
-        cfg = self.cfg
-        outs: List[np.ndarray] = []
-        for i in range(0, len(prompts), cfg.max_batch):
-            wave = prompts[i:i + cfg.max_batch]
-            outs.extend(self._wave(wave, max_new_tokens))
+        """Greedy generation; returns one token array per prompt, truncated
+        at EOS when ``cfg.eos_token`` is set."""
+        outs, _ = self.serve(as_requests(prompts, max_new_tokens))
         return outs
 
-    def _wave(self, wave: List[np.ndarray], max_new: int) -> List[np.ndarray]:
+    def serve(self, requests: List[Request]
+              ) -> Tuple[List[np.ndarray], ServeStats]:
+        raise NotImplementedError
+
+    @staticmethod
+    def _sorted_queue(requests: List[Request]
+                      ) -> "deque[Tuple[int, Request]]":
+        """Admission queue of (input position, request), arrival-ordered.
+
+        Outputs are always returned in input order (the position, not the
+        caller-supplied ``request_id``, indexes them); metrics carry the
+        caller's ``request_id`` when set, else the position."""
+        reqs = []
+        for i, r in enumerate(requests):
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {i}: empty prompt")
+            if r.max_new_tokens < 1:
+                raise ValueError(f"request {i}: max_new_tokens must be >= 1 "
+                                 f"(got {r.max_new_tokens})")
+            if r.request_id < 0:
+                r = dataclasses.replace(r, request_id=i)
+            reqs.append((i, r))
+        return deque(sorted(reqs, key=lambda e: (e[1].arrival_s, e[0])))
+
+
+class ServingEngine(EngineBase):
+    """Wave-synchronous scheduler: one left-padded prefill per admission
+    wave; every member of a wave waits for the slowest before the next
+    wave starts (the continuous engine removes this barrier)."""
+
+    scheduler = "wave"
+
+    def serve(self, requests: List[Request]
+              ) -> Tuple[List[np.ndarray], ServeStats]:
+        t0 = time.perf_counter()
+        queue = self._sorted_queue(requests)
+        outs: List[Optional[np.ndarray]] = [None] * len(requests)
+        metrics: List[Tuple[int, RequestMetrics]] = []
+        decode_steps = prefills = 0
+        while queue:
+            now = time.perf_counter() - t0
+            if queue[0][1].arrival_s > now:    # replaying a timed trace
+                time.sleep(queue[0][1].arrival_s - now)
+                now = time.perf_counter() - t0
+            wave: List[Tuple[int, Request]] = []
+            while queue and len(wave) < self.cfg.max_batch \
+                    and queue[0][1].arrival_s <= now:
+                wave.append(queue.popleft())
+            admit = time.perf_counter() - t0
+            toks, reasons, first_s, finish_s, steps = self._wave(
+                [req for _, req in wave], t0)
+            decode_steps += steps
+            prefills += 1
+            for r, (idx, req) in enumerate(wave):
+                outs[idx] = toks[r]
+                metrics.append((idx, RequestMetrics(
+                    request_id=req.request_id, prompt_len=len(req.prompt),
+                    new_tokens=len(toks[r]),
+                    queue_wait_s=admit - req.arrival_s,
+                    ttft_s=first_s - req.arrival_s,
+                    decode_s=finish_s[r] - first_s,
+                    finish_reason=reasons[r])))
+        stats = ServeStats(scheduler=self.scheduler,
+                           requests=[m for _, m in sorted(metrics)],
+                           wall_s=time.perf_counter() - t0,
+                           decode_steps=decode_steps,
+                           prefill_chunks=prefills)  # one prefill per wave
+        return outs, stats
+
+    def _wave(self, wave: List[Request], t0: float):
+        """Prefill + decode one wave.  Returns (tokens per row, finish
+        reasons, first-token time, per-row finish times, decode steps)."""
+        cfg = self.cfg
         B = len(wave)
-        plen = max(len(p) for p in wave)
+        prompts = [r.prompt for r in wave]
+        budgets = np.array([r.max_new_tokens for r in wave], np.int64)
+        plen = max(len(p) for p in prompts)
+        pads = np.array([plen - len(p) for p in prompts], np.int32)
         toks = np.zeros((B, plen), np.int32)
-        for r, p in enumerate(wave):
+        for r, p in enumerate(prompts):
             toks[r, plen - len(p):] = p  # left-pad (simplest batching)
-        last, cache = self.prefill(self.params, {"tokens": jnp.asarray(toks)})
-        T = plen + max_new
-        cache = _pad_cache_to(cache, T)
+        batch = {"tokens": jnp.asarray(toks)}
+        ragged = bool(pads.any())
+        if ragged and self.model.supports_ragged:
+            # per-row positions skip the pad; pad rows are masked out as
+            # attention keys, so a short row decodes exactly as if unbatched
+            pos_grid = np.maximum(
+                np.arange(plen)[None, :] - pads[:, None], 0).astype(np.int32)
+            if getattr(self.model.cfg, "mrope", False):
+                pos_grid = np.broadcast_to(pos_grid, (3, B, plen))
+            batch["positions"] = jnp.asarray(pos_grid)
+            batch["attn_mask"] = jnp.asarray(
+                np.arange(plen)[None, :] >= pads[:, None])
+        last, cache = self.prefill(self.params, batch)
+        max_new = int(budgets.max())
+        cache = _pad_cache_to(cache, plen + max_new)
+        kv_start = jnp.asarray(pads)
+        one = jnp.ones((B,), jnp.int32)
         cur = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
         pos = jnp.full((B,), plen, jnp.int32)
-        gen = [np.asarray(cur)[:, 0]]
-        for _ in range(max_new - 1):
-            logits, cache = self.decode(self.params, cache, cur, pos)
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-            pos = pos + 1
-            gen.append(np.asarray(cur)[:, 0])
-        gen_arr = np.stack(gen, axis=1)  # (B, max_new)
-        return [gen_arr[r] for r in range(B)]
+
+        host_cur = np.asarray(cur)[:, 0]   # blocks until prefill is done
+        first_s = time.perf_counter() - t0
+        gen: List[List[int]] = [[int(t)] for t in host_cur]
+        reasons = ["length"] * B
+        finish_s = [first_s] * B
+        eos = cfg.eos_token
+        done = np.zeros(B, bool)
+        for r in range(B):
+            if eos is not None and host_cur[r] == eos:
+                done[r], reasons[r] = True, "eos"
+            elif budgets[r] == 1:
+                done[r] = True
+        steps = 0
+        while not done.all():
+            cur, pos, cache = self.decode_tick(self.params, cache, cur,
+                                               pos, one, kv_start)
+            steps += 1
+            host_cur = np.asarray(cur)[:, 0]
+            now_s = time.perf_counter() - t0
+            for r in range(B):
+                if done[r]:
+                    continue
+                gen[r].append(int(host_cur[r]))
+                finish_s[r] = now_s
+                if eos is not None and host_cur[r] == eos:
+                    done[r], reasons[r] = True, "eos"
+                elif len(gen[r]) >= budgets[r]:
+                    done[r] = True
+        return ([np.array(g, np.int32) for g in gen], reasons, first_s,
+                finish_s, steps)

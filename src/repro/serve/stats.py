@@ -1,0 +1,119 @@
+"""Serving request/metrics types shared by the wave and continuous engines.
+
+A :class:`Request` is what a client submits (prompt + decode budget +
+arrival time for trace replay); a :class:`RequestMetrics` is what the
+scheduler measured for it; a :class:`ServeStats` aggregates one serving run
+into the report `launch/serve.py` prints and
+`benchmarks/serving_throughput.py` writes as a JSON artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival_s`` is the offset from the start
+    of the serving run at which the request becomes visible to the
+    scheduler (0 = already queued), enabling Poisson-trace replay.
+
+    ``request_id`` is a caller-side label surfaced in
+    :class:`RequestMetrics` (-1 = auto-assign the input position); engine
+    outputs are always returned in input order regardless of it."""
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    arrival_s: float = 0.0
+    request_id: int = -1
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    request_id: int
+    prompt_len: int
+    new_tokens: int
+    queue_wait_s: float        # arrival -> admitted into a slot/wave
+    ttft_s: float              # arrival -> first generated token
+    decode_s: float            # first generated token -> last
+    finish_reason: str         # "eos" | "length"
+
+    @property
+    def decode_tps(self) -> float:
+        """Steady-state decode rate (tokens after the first / decode time)."""
+        if self.new_tokens <= 1 or self.decode_s <= 0:
+            return float("inf") if self.new_tokens > 1 else 0.0
+        return (self.new_tokens - 1) / self.decode_s
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["decode_tps"] = self.decode_tps
+        return d
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate report for one serving run."""
+    scheduler: str
+    requests: List[RequestMetrics]
+    wall_s: float
+    decode_steps: int = 0      # jit'd decode-step invocations
+    prefill_chunks: int = 0    # jit'd prefill/chunk invocations
+
+    @property
+    def total_new_tokens(self) -> int:
+        return sum(r.new_tokens for r in self.requests)
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.total_new_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def _quantile(self, vals: List[float], q: float) -> float:
+        return float(np.quantile(np.asarray(vals), q)) if vals else 0.0
+
+    def ttft_s(self, q: float = 0.5) -> float:
+        return self._quantile([r.ttft_s for r in self.requests], q)
+
+    def queue_wait_s(self, q: float = 0.5) -> float:
+        return self._quantile([r.queue_wait_s for r in self.requests], q)
+
+    def to_dict(self) -> Dict:
+        return {
+            "scheduler": self.scheduler,
+            "wall_s": self.wall_s,
+            "requests": len(self.requests),
+            "total_new_tokens": self.total_new_tokens,
+            "throughput_tps": self.throughput_tps,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "ttft_s_p50": self.ttft_s(0.5),
+            "ttft_s_p95": self.ttft_s(0.95),
+            "queue_wait_s_p50": self.queue_wait_s(0.5),
+            "queue_wait_s_p95": self.queue_wait_s(0.95),
+            "finish_reasons": {
+                reason: sum(1 for r in self.requests
+                            if r.finish_reason == reason)
+                for reason in sorted({r.finish_reason
+                                      for r in self.requests})},
+            "per_request": [r.to_dict() for r in self.requests],
+        }
+
+    def summary(self) -> str:
+        return (f"[{self.scheduler}] {len(self.requests)} requests, "
+                f"{self.total_new_tokens} tokens in {self.wall_s:.2f}s "
+                f"({self.throughput_tps:.1f} tok/s) | "
+                f"ttft p50/p95 {self.ttft_s(0.5) * 1e3:.0f}/"
+                f"{self.ttft_s(0.95) * 1e3:.0f} ms | "
+                f"queue p95 {self.queue_wait_s(0.95) * 1e3:.0f} ms | "
+                f"{self.decode_steps} decode steps, "
+                f"{self.prefill_chunks} prefill chunks")
+
+
+def as_requests(prompts: List[np.ndarray], max_new_tokens: int
+                ) -> List[Request]:
+    """Wrap plain prompt arrays as already-arrived requests."""
+    return [Request(prompt=np.asarray(p, np.int32),
+                    max_new_tokens=max_new_tokens, request_id=i)
+            for i, p in enumerate(prompts)]

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ckpt import (AsyncCheckpointer, latest_checkpoint,
-                        restore_checkpoint, save_checkpoint)
+                        restore_checkpoint, restore_params, save_checkpoint)
 from repro.data import DataConfig, SyntheticLM, host_shard_iterator
 from repro.runtime import (HeartbeatMonitor, RestartPolicy,
                            StragglerDetector, plan_mesh_shape,
@@ -163,3 +163,28 @@ def test_data_is_learnable_structure():
     pred = (src.a * b["tokens"] + src.b
             + (np.arange(cfg.seq_len) % 7)) % cfg.vocab_size
     np.testing.assert_array_equal(pred, b["labels"])
+
+
+def test_restore_params_subtree(tmp_path):
+    """Serving restores only the params subtree of a training state."""
+    d = str(tmp_path / "ckpt")
+    state = _state()
+    save_checkpoint(d, 2, state)
+    params = restore_params(latest_checkpoint(d),
+                            jax.eval_shape(lambda: state["params"]))
+    assert params["b"].dtype == jnp.bfloat16
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_restore_params_missing_param_is_clear_error(tmp_path):
+    """A checkpoint lacking a param must raise a ValueError naming it,
+    not a bare KeyError from deep inside the tree walk."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state())
+    template = {"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,)),
+                "brand_new": jnp.zeros((2,))}
+    with pytest.raises(ValueError, match="missing param.*brand_new"):
+        restore_params(latest_checkpoint(d), template)

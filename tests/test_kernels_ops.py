@@ -1,0 +1,52 @@
+"""Public kernel wrappers (`repro.kernels.ops`) — jit-cache semantics.
+
+Separate from tests/test_kernels.py so this regression coverage does not
+disappear when the optional `hypothesis` dependency is absent.
+"""
+
+import pytest
+
+pytest.importorskip("jax")  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ops
+
+
+def test_set_interpret_default_applies_after_first_call(monkeypatch):
+    """Regression: the public wrappers once baked ``_INTERPRET_DEFAULT``
+    into the first jit trace (``config=None`` was the static key), so a
+    ``set_interpret_default()`` flip after the first call silently served
+    the stale mode from the jit cache.  The resolved config must be the
+    static key: each spy below must see the *live* default on every call."""
+    seen = {"mm": [], "fa": [], "ssd": []}
+    monkeypatch.setattr(ops, "matmul",
+                        lambda a, b, config, out_dtype=None:
+                        (seen["mm"].append(config.interpret), a @ b)[1])
+    monkeypatch.setattr(ops, "flash_attention",
+                        lambda q, k, v, causal=False, scale=None, config=None:
+                        (seen["fa"].append(config.interpret), q)[1])
+    monkeypatch.setattr(ops, "ssd_chunk",
+                        lambda x, a, b, c, h0=None, config=None:
+                        (seen["ssd"].append(config.interpret), x)[1])
+    # odd shapes so no earlier test shares these jit cache keys
+    a = jnp.ones((9, 7), jnp.float32)
+    b = jnp.ones((7, 5), jnp.float32)
+    q = jnp.ones((1, 2, 9, 8), jnp.float32)
+    x = jnp.ones((1, 9, 2, 4), jnp.float32)
+    aa = jnp.zeros((1, 9, 2), jnp.float32)
+    bc = jnp.ones((1, 9, 3), jnp.float32)
+    orig = ops.interpret_default()
+    try:
+        for flag in (True, False):
+            ops.set_interpret_default(flag)
+            ops.matmul_op(a, b)
+            ops.attention_op(q, q, q)
+            ops.ssd_chunk_op(x, aa, bc, bc)
+    finally:
+        ops.set_interpret_default(orig)
+        # the spy-traced entries must not leak into later tests
+        ops._matmul_jit.clear_cache()
+        ops._attention_jit.clear_cache()
+        ops._ssd_chunk_jit.clear_cache()
+    assert seen == {"mm": [True, False], "fa": [True, False],
+                    "ssd": [True, False]}

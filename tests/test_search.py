@@ -1,6 +1,7 @@
 """Search methods: quality ordering, sample efficiency, MP seeding."""
 
 import random
+import time
 
 from repro.core import (EvoConfig, GenomeSpace, PerformanceModel,
                         TilingProblem, U250, baselines, build_descriptor,
@@ -98,3 +99,41 @@ def test_tune_workload_all_designs():
             and r.design.permutation.label() == "<[i,j],[k]>"]
     assert ij_k, "no feasible <[i,j],[k]> design found"
     assert min(ij_k) == rep.best.latency_cycles
+
+
+# ---------------------------------------------------------------------- #
+class _CountingModel:
+    """Delegating proxy that counts fitness evaluations."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+
+    def fitness(self, g):
+        self.calls += 1
+        time.sleep(0.002)  # make a tiny time budget bite mid-search
+        return self.inner.fitness(g)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_random_search_time_budget_reports_actual_evals():
+    """Regression: ``evals`` was reported as ``max_evals`` even when the
+    time budget broke the loop early, inflating Fig.-8 sample-efficiency
+    traces."""
+    wl, perm, desc, model, space = _setup()
+    counting = _CountingModel(model)
+    res = baselines.random_search(space, counting, max_evals=3000,
+                                  time_budget_s=0.05)
+    assert res.evals == counting.calls
+    assert 0 < res.evals < 3000
+
+
+def test_simulated_annealing_time_budget_reports_actual_evals():
+    wl, perm, desc, model, space = _setup()
+    counting = _CountingModel(model)
+    res = baselines.simulated_annealing(space, counting, max_evals=3000,
+                                        time_budget_s=0.05)
+    assert res.evals == counting.calls
+    assert 0 < res.evals < 3000
