@@ -11,17 +11,16 @@ fig11_13_14   — per-dataflow throughput across VGG16 and ResNet50 CONV
 
 from __future__ import annotations
 
-import math
 import random
 import time
 
 from repro.core import (EvoConfig, GenomeSpace, PerformanceModel, U250,
-                        build_descriptor, cnn_validation, conv2d,
-                        enumerate_dataflows, enumerate_designs,
-                        mm_validation, pruned_permutations, simulate,
-                        tune_design, vgg16_convs, resnet50_convs)
+                        build_descriptor, cnn_validation,
+                        enumerate_designs, mm_validation,
+                        pruned_permutations, simulate, tune_design,
+                        vgg16_convs)
 
-from .common import emit, save_json, timed
+from .common import emit, save_json
 
 
 def bench_fig6():
@@ -54,47 +53,29 @@ def bench_fig6():
     save_json("fig6", out)
 
 
-def _geomean(xs):
-    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
-
-
-def _network_study(layers, name, cfg):
-    """Best throughput per (dataflow x layer), ordering fixed to
-    <[o,h,w],[i,p,q]> as in the paper's Fig. 13."""
-    dataflows = enumerate_dataflows(layers[0])
-    perm = [p for p in pruned_permutations(layers[0])
-            if set(p.inner) == {"i", "p", "q"}][0]
-    table = {}
-    for df in dataflows:
-        per_layer = []
-        for wl in layers:
-            res = tune_design(wl, df, perm, cfg=cfg)
-            per_layer.append(res.throughput)
-        table["+".join(df)] = per_layer
-    peak = [max(table[df][i] for df in table) for i in range(len(layers))]
-    geo = {df: _geomean([table[df][i] / peak[i]
-                         for i in range(len(layers))]) for df in table}
-    best_df = max(geo, key=geo.get)
-    return table, geo, best_df, peak
-
-
 def bench_fig11_13_14():
+    """Single-dataflow loss vs per-layer peak, via the network subsystem
+    (``repro.network.dataflow_study`` is the one source of truth; it
+    dedups shape classes, so duplicate layers tune once)."""
+    from repro.network import (dataflow_study, geomean,
+                               resnet50_graph, vgg16_graph)
+
     cfg = EvoConfig(epochs=30, population=40, seed=0)
     t0 = time.time()
-    vgg = vgg16_convs()
-    tv, gv, best_v, peak_v = _network_study(vgg, "vgg16", cfg)
+    study_v = dataflow_study(vgg16_graph(), cfg)
+    gv, best_v = study_v.geomean, study_v.best
     emit("fig13_vgg16_best_dataflow", (time.time() - t0) * 1e6, best_v)
     emit("fig14a_vgg16_geomean_frac", 0,
          f"{gv[best_v]:.3f} (paper 0.77)")
     twod = [df for df in gv if "+" in df]
     oned = [df for df in gv if "+" not in df]
     emit("fig13_2d_beats_1d", 0,
-         f"{_geomean([gv[d] for d in twod]):.3f} vs "
-         f"{_geomean([gv[d] for d in oned]):.3f}")
+         f"{geomean([gv[d] for d in twod]):.3f} vs "
+         f"{geomean([gv[d] for d in oned]):.3f}")
 
     t1 = time.time()
-    rn = resnet50_convs()
-    tr, gr, best_r, peak_r = _network_study(rn, "resnet50", cfg)
+    study_r = dataflow_study(resnet50_graph(), cfg)
+    gr, best_r = study_r.geomean, study_r.best
     emit("fig14b_resnet50_geomean_frac", (time.time() - t1) * 1e6,
          f"{gr[best_r]:.3f} (paper 0.57)")
     save_json("fig11_13_14", {
@@ -103,6 +84,7 @@ def bench_fig11_13_14():
     })
 
     # Table 7 flavor: CONV1 vs CONV2 best dataflows
+    vgg = vgg16_convs()
     c1, c2 = vgg[0], vgg[1]
     perm = [p for p in pruned_permutations(c1)
             if set(p.inner) == {"i", "p", "q"}][0]

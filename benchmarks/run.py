@@ -23,13 +23,14 @@ def main() -> None:
                     help="skip the multi-minute network studies")
     args = ap.parse_args()
 
-    from . import (paper_mm, paper_cnn, registry_warmstart, roofline,
-                   search_speed, serving_throughput)
+    from . import (network_dse, paper_mm, paper_cnn, registry_warmstart,
+                   roofline, search_speed, serving_throughput)
 
     benches = [
         ("search_speed", search_speed.bench_search_speed),
         ("registry_warmstart", registry_warmstart.bench_registry_warmstart),
         ("serving_throughput", serving_throughput.bench_serving_throughput),
+        ("network_dse", network_dse.bench_network_dse),
         ("table2", paper_mm.bench_table2),
         ("fig1_fig15", paper_mm.bench_fig1_fig15),
         ("table3", paper_mm.bench_table3),
@@ -41,7 +42,9 @@ def main() -> None:
         ("roofline_table", roofline.bench_roofline_table),
         ("kernel_autotune", roofline.bench_kernel_autotune),
     ]
-    slow = {"fig11_13_14_table7", "fig7_8_9"}
+    # network_dse runs the whole-graph studies: multi-minute, like the
+    # fig11_13_14 network sweeps (its CI entry is the --smoke CLI)
+    slow = {"fig11_13_14_table7", "fig7_8_9", "network_dse"}
 
     print("name,us_per_call,derived")
     failures = []

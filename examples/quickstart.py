@@ -82,7 +82,54 @@ def main() -> None:
           f"(inspect with: python -m repro.registry list --root "
           f"{os.path.relpath(REGISTRY_DIR)})")
 
+    network_demo(store)
     serving_demo()
+
+
+def network_demo(store: RegistryStore) -> None:
+    """Network-level DSE (DESIGN.md §11): tune a *whole model config*.
+
+    Every GEMM a served transformer issues (attention projections, MLP,
+    LM head; prefill and decode token dims) is extracted into a
+    LayerGraph, deduped into shape classes, and swept through the
+    registry-backed engine.  The second run — and any serving replica
+    pointing at the same registry — resolves every class with 0 evals.
+    """
+    from repro.configs import get_smoke_config
+    from repro.kernels.autotune import pretune_model_config
+    from repro.network import AssignConfig, NetworkSession, \
+        model_config_graph
+
+    cfg = get_smoke_config("smollm-135m")
+    graph = model_config_graph(cfg, batch=4, prefill_len=64)
+    s = graph.summary()
+    print(f"\nnetwork DSE: {s['name']} — {s['layers']} layer GEMMs "
+          f"collapse to {s['classes']} shape classes")
+
+    for attempt in ("cold", "warm"):
+        t0 = time.time()
+        sess = NetworkSession(
+            graph, cfg=EvoConfig(epochs=8, population=16, seed=0),
+            registry=store,
+            assign=AssignConfig(max_arrays=2, retune_evals=60,
+                                amortize_over=16))
+        rep = sess.run(k_values=(1, 2))
+        print(f"  {attempt} run: {rep.total_evals} evals, "
+              f"{time.time() - t0:.2f}s — uniform array at "
+              f"{rep.per_layer_cycles / rep.uniform_cycles:.0%} of the "
+              f"per-layer ideal")
+
+    # the TPU-side twin: pre-resolve every Pallas matmul block config the
+    # serving engine will need (launch/serve.py --pretune does this); the
+    # second pass is what every later replica on this registry pays
+    from repro.kernels.autotune import reset_config_lru
+    for attempt in ("first replica", "later replicas"):
+        stats = pretune_model_config(cfg, batch=4, prefill_len=64,
+                                     registry=store)
+        print(f"  kernel pre-tune ({attempt}): {stats['shapes']} block "
+              f"configs — {stats['tuned']} searched, "
+              f"{stats['disk_hits'] + stats['lru_hits']} cached")
+        reset_config_lru()   # later replicas have cold process memory
 
 
 def serving_demo() -> None:

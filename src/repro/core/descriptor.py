@@ -47,6 +47,13 @@ class ArrayInfo:
     # loops).  Non-empty iff the permutation forces partial results off-chip,
     # i.e. AutoSA would instantiate the extra C(in) I/O modules.
     outer_flow_loops: Tuple[str, ...]
+    # subscript multipliers per dim (strided windows); all-ones when None
+    coeffs: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def dim_coeffs(self, i: int) -> Tuple[int, ...]:
+        if self.coeffs is None:
+            return (1,) * len(self.dims[i])
+        return self.coeffs[i]
 
     @property
     def needs_inbound_partials(self) -> bool:
@@ -100,11 +107,16 @@ class DesignDescriptor:
     def tile_elems(self, arr: ArrayInfo, g: Genome) -> int:
         """On-chip tile footprint of one array-partition tile of ``arr``.
 
-        Sliding-window dims (e.g. ``h+p``) occupy ``T_h + T_p - 1``.
+        A dim subscripted ``sum_l c_l * l`` spans ``sum_l c_l*(T_l-1) + 1``
+        elements: the classic sliding window ``h+p`` occupies
+        ``T_h + T_p - 1``, a strided window ``s*h + p`` exactly
+        ``s*(T_h-1) + T_p`` (not ``s*T_h + T_p - 1`` — a stride-s window
+        never touches the s-1 columns past its last tap).
         """
         n = 1
-        for dim in arr.dims:
-            size = sum(g.t1(l) for l in dim) - (len(dim) - 1)
+        for i, dim in enumerate(arr.dims):
+            cs = arr.dim_coeffs(i)
+            size = sum(c * (g.t1(l) - 1) for c, l in zip(cs, dim)) + 1
             n *= size
         return n
 
@@ -183,7 +195,7 @@ def build_descriptor(wl: Workload, dataflow: Tuple[str, ...],
         arrays.append(ArrayInfo(
             name=a.name, is_output=a.is_output, dims=a.dims,
             access_loops=a.access_loops, maxpos=maxpos,
-            outer_flow_loops=outer_flow))
+            outer_flow_loops=outer_flow, coeffs=a.coeffs))
 
     modules: List[ModuleInfo] = [ModuleInfo("PE", "pe", None)]
     for a in arrays:

@@ -46,8 +46,10 @@ def _norm_constants(model: PerformanceModel) -> Tuple[float, float]:
     elems = 0
     for a in model.desc.arrays:
         n = 1
-        for dim in a.dims:
-            n *= sum(wl.loop(l).bound for l in dim) - (len(dim) - 1)
+        for i, dim in enumerate(a.dims):
+            cs = a.dim_coeffs(i)
+            n *= sum(c * (wl.loop(l).bound - 1)
+                     for c, l in zip(cs, dim)) + 1
         elems += n
     dm_scale = float(elems * model.desc.dtype_bytes)  # one full sweep
     dsp_scale = float(model.hw.dsp_available)

@@ -339,6 +339,8 @@ class BatchPerformanceModel:
                 "name": a.name,
                 "is_output": a.is_output,
                 "dims": [[idx[l] for l in dim] for dim in a.dims],
+                "coeffs": [np.array(a.dim_coeffs(i), dtype=np.int64)
+                           for i in range(len(a.dims))],
                 "maxpos": a.maxpos,
                 "flow": [idx[l] for l in a.outer_flow_loops],
                 "needs_inbound_partials": a.needs_inbound_partials,
@@ -366,8 +368,8 @@ class BatchPerformanceModel:
 
     def _tile_bytes(self, arr: dict, t1: np.ndarray) -> np.ndarray:
         elems = np.ones(t1.shape[0], dtype=np.int64)
-        for dim in arr["dims"]:
-            size = t1[:, dim].sum(axis=1) - (len(dim) - 1)
+        for dim, cs in zip(arr["dims"], arr["coeffs"]):
+            size = ((t1[:, dim] - 1) * cs).sum(axis=1) + 1
             elems = elems * size
         return elems * self.desc.dtype_bytes
 
@@ -561,12 +563,17 @@ def generate_model_source(desc: DesignDescriptor, hw: HardwareProfile) -> str:
     lines.append("    out = {}")
     for a in desc.arrays:
         terms = []
-        for dim in a.dims:
-            expr = " + ".join(f"tp['{l}'][1]*tp['{l}'][2]" for l in dim)
-            if len(dim) > 1:
-                expr = "(%s - %d)" % (expr, len(dim) - 1)
+        for i, dim in enumerate(a.dims):
+            cs = a.dim_coeffs(i)
+            if len(dim) > 1 or any(c != 1 for c in cs):
+                # window extent: sum_l c_l*(T_l - 1) + 1
+                expr = " + ".join(
+                    (f"{c}*" if c != 1 else "")
+                    + f"(tp['{l}'][1]*tp['{l}'][2] - 1)"
+                    for c, l in zip(cs, dim))
+                expr = "(%s + 1)" % expr
             else:
-                expr = "(%s)" % expr
+                expr = "(tp['%s'][1]*tp['%s'][2])" % (dim[0], dim[0])
             terms.append(expr)
         lines.append("    out['%s'] = %s * %d" % (
             a.name, " * ".join(terms), desc.dtype_bytes))

@@ -21,7 +21,7 @@ complement of the subscript loops — the set the paper calls ``RL(r)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +38,28 @@ class ArrayRef:
     ``dims`` is a tuple of tuples of loop names.  A dim with several loops
     models a sliding-window subscript like ``h + p`` in a convolution whose
     tile extent is ``T_h + T_p - 1``.
+
+    ``coeffs`` (same nesting as ``dims``) are the integer subscript
+    multipliers: a strided window ``s*h + p`` has coefficients ``(s, 1)``
+    and tile extent ``s*(T_h-1) + T_p``.  ``None`` means all-ones (the
+    unstrided case), keeping the common path allocation-free.
     """
 
     name: str
     dims: Tuple[Tuple[str, ...], ...]
     is_output: bool = False
+    coeffs: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def dim_coeffs(self, i: int) -> Tuple[int, ...]:
+        """Subscript multipliers of dim ``i`` (all-ones when unset)."""
+        if self.coeffs is None:
+            return (1,) * len(self.dims[i])
+        return self.coeffs[i]
+
+    @property
+    def has_strides(self) -> bool:
+        return self.coeffs is not None and \
+            any(c != 1 for dim in self.coeffs for c in dim)
 
     @property
     def access_loops(self) -> Tuple[str, ...]:
@@ -128,10 +145,19 @@ def matmul(i: int, j: int, k: int, dtype: str = "fp32") -> Workload:
 
 
 def conv2d(i: int, o: int, h: int, w: int, p: int, q: int,
-           dtype: str = "fp32") -> Workload:
-    """fo[o,h,w] += fi[i,h+p,w+q] * wgt[o,i,p,q]  (batch 1, stride 1)."""
+           stride: int = 1, dtype: str = "fp32") -> Workload:
+    """fo[o,h,w] += fi[i,s*h+p,s*w+q] * wgt[o,i,p,q]  (batch 1, stride s).
+
+    ``h``/``w`` are the *output* spatial extents, so ``total_macs`` stays
+    the product of the loop bounds at any stride.  The strided input
+    window makes the fi tile extent ``s*(T_h-1) + T_p`` (s=1 reduces to
+    the classic ``T_h + T_p - 1`` sliding window).
+    """
+    name = f"conv_i{i}_o{o}_h{h}_w{w}_p{p}_q{q}"
+    if stride != 1:
+        name += f"_s{stride}"
     return Workload(
-        name=f"conv_i{i}_o{o}_h{h}_w{w}_p{p}_q{q}",
+        name=name,
         loops=(
             Loop("o", o, parallel=True),
             Loop("h", h, parallel=True),
@@ -141,7 +167,9 @@ def conv2d(i: int, o: int, h: int, w: int, p: int, q: int,
             Loop("q", q, parallel=False),
         ),
         arrays=(
-            ArrayRef("fi", (("i",), ("h", "p"), ("w", "q"))),
+            ArrayRef("fi", (("i",), ("h", "p"), ("w", "q")),
+                     coeffs=None if stride == 1 else
+                     ((1,), (stride, 1), (stride, 1))),
             ArrayRef("wgt", (("o",), ("i",), ("p",), ("q",))),
             ArrayRef("fo", (("o",), ("h",), ("w",)), is_output=True),
         ),
@@ -183,25 +211,27 @@ VGG16_LAYERS: Sequence[Tuple[int, int, int, int, int, int]] = (
     (512, 512, 14, 14, 3, 3),
 )
 
-# ResNet50 3x3 CONV layers (the systolic-mappable stride-1 3x3 cores of each
-# stage) [arXiv:1512.03385]; 1x1 convs are MMs and handled by the MM flow.
-RESNET50_LAYERS: Sequence[Tuple[int, int, int, int, int, int]] = (
-    (64, 64, 56, 56, 3, 3),
-    (64, 64, 56, 56, 3, 3),
-    (64, 64, 56, 56, 3, 3),
-    (128, 128, 28, 28, 3, 3),
-    (128, 128, 28, 28, 3, 3),
-    (128, 128, 28, 28, 3, 3),
-    (128, 128, 28, 28, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (256, 256, 14, 14, 3, 3),
-    (512, 512, 7, 7, 3, 3),
-    (512, 512, 7, 7, 3, 3),
-    (512, 512, 7, 7, 3, 3),
+# ResNet50 3x3 CONV cores, one per bottleneck block [arXiv:1512.03385];
+# (I, O, H_out, W_out, P, Q, stride).  The first block of stages 3-5
+# downsamples with a stride-2 3x3 (56->28, 28->14, 14->7); 1x1 convs are
+# MMs and handled by the MM flow.
+RESNET50_LAYERS: Sequence[Tuple[int, int, int, int, int, int, int]] = (
+    (64, 64, 56, 56, 3, 3, 1),
+    (64, 64, 56, 56, 3, 3, 1),
+    (64, 64, 56, 56, 3, 3, 1),
+    (128, 128, 28, 28, 3, 3, 2),
+    (128, 128, 28, 28, 3, 3, 1),
+    (128, 128, 28, 28, 3, 3, 1),
+    (128, 128, 28, 28, 3, 3, 1),
+    (256, 256, 14, 14, 3, 3, 2),
+    (256, 256, 14, 14, 3, 3, 1),
+    (256, 256, 14, 14, 3, 3, 1),
+    (256, 256, 14, 14, 3, 3, 1),
+    (256, 256, 14, 14, 3, 3, 1),
+    (256, 256, 14, 14, 3, 3, 1),
+    (512, 512, 7, 7, 3, 3, 2),
+    (512, 512, 7, 7, 3, 3, 1),
+    (512, 512, 7, 7, 3, 3, 1),
 )
 
 

@@ -307,3 +307,57 @@ def predicted_mfu(M: int, N: int, K: int, cfg: MatmulConfig,
                   dtype_bytes: int = 2) -> float:
     model = TpuMatmulModel(M=M, N=N, K=K, dtype_bytes=dtype_bytes)
     return model.mfu((cfg.bm, cfg.bk, cfg.bn, cfg.k_innermost))
+
+
+def reset_config_lru() -> None:
+    """Drop the in-process block-config LRU (not the disk registry).
+
+    Lets tests and the pre-tune benchmark prove that a second resolution
+    pass is served by the *persistent* registry rather than process
+    memory."""
+    with _lru_lock:
+        _config_lru.clear()
+    _tune_matmul_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------- #
+# Network-level pre-tune: resolve every GEMM a model will issue, upfront
+# ---------------------------------------------------------------------- #
+def pretune_gemms(shapes: Sequence[Tuple[int, int, int]],
+                  registry=None, evals: int = 2000, seed: int = 0,
+                  dtype_bytes: int = 2) -> Dict[str, int]:
+    """Resolve a block config for every (M, N, K), warming LRU + registry.
+
+    Returns resolution-source counters (``shapes``/``tuned``/
+    ``disk_hits``/``lru_hits``): a warm second pass over the same shapes
+    against the same registry reports ``tuned == 0`` — every config
+    comes from the persistent store with zero search evals.
+    """
+    registry = registry if registry is not None else default_registry()
+    stats: Dict[str, int] = {}
+    for (M, N, K) in shapes:
+        resolve_matmul_config(M, N, K, dtype_bytes=dtype_bytes,
+                              registry=registry, evals=evals, seed=seed,
+                              stats=stats)
+    return {"shapes": len(shapes),
+            "tuned": stats.get("tuned", 0),
+            "disk_hits": stats.get("disk_hits", 0),
+            "lru_hits": stats.get("lru_hits", 0)}
+
+
+def pretune_model_config(mcfg, batch: int, prefill_len: int,
+                         registry=None, evals: int = 2000,
+                         decode_batch: Optional[int] = None
+                         ) -> Dict[str, int]:
+    """One network pass over a model config's whole GEMM graph.
+
+    Builds the per-layer prefill+decode :class:`repro.network.LayerGraph`
+    for ``mcfg`` and resolves every unique (M, N, K) block config, so a
+    serving replica (``launch/serve.py --pretune``) starts with all of
+    its matmul schedules decided before traffic arrives.
+    """
+    from repro.network.graph import model_config_graph
+    graph = model_config_graph(mcfg, batch=batch, prefill_len=prefill_len,
+                               decode_batch=decode_batch)
+    return pretune_gemms(graph.gemm_shapes(), registry=registry,
+                         evals=evals)

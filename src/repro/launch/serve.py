@@ -44,6 +44,11 @@ def main(argv=None):
                     help="shared design-registry root; replicas pointing at "
                          "the same dir share tuned kernels (default: "
                          "$REPRO_REGISTRY_DIR if set, else disabled)")
+    ap.add_argument("--pretune", action="store_true",
+                    help="resolve every GEMM block config of the model's "
+                         "layer graph (prefill + decode) through the "
+                         "registry before serving; a replica against a "
+                         "warm registry resolves all of them with 0 evals")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -61,6 +66,18 @@ def main(argv=None):
     if registry_dir:
         from repro.registry import RegistryStore, TuningService
         tuning = TuningService(RegistryStore(registry_dir))
+
+    if args.pretune:
+        from repro.kernels.autotune import pretune_model_config
+        stats = pretune_model_config(
+            cfg, batch=args.max_batch, prefill_len=args.max_seq,
+            registry=tuning.store if tuning is not None else None)
+        print(f"[serve] pretune: {stats['shapes']} layer GEMM shapes — "
+              f"{stats['tuned']} tuned, {stats['disk_hits']} from "
+              f"registry, {stats['lru_hits']} from LRU")
+        if tuning is None:
+            print("[serve] pretune warning: no --registry-dir, configs "
+                  "live only in this process's LRU")
 
     eng = make_engine(args.scheduler, model, params,
                       ServeConfig(max_batch=args.max_batch,

@@ -1,0 +1,31 @@
+"""Network-level DSE: whole-model layer graphs, array assignment, pre-tune.
+
+The subsystem above the per-workload search stack (DESIGN.md §11):
+
+    graph.py      LayerGraph IR + extractors (CONV tables, ModelConfigs)
+    assign.py     uniform / heterogeneous layer->array assignment (exact DP
+                  with a reconfiguration-cost model, fixed-geometry re-tune)
+    session.py    NetworkSession orchestrator + the paper-parity
+                  dataflow_study (Figs. 11/13/14)
+    __main__.py   CLI: python -m repro.network --model vgg16 ...
+"""
+
+from .graph import (LayerClass, LayerGraph, LayerNode, conv_graph,
+                    layer_gemm_slots, model_config_graph, resnet50_graph,
+                    vgg16_graph)
+from .assign import (ArrayGeometry, AssignConfig, Assignment, TilingFit,
+                     brute_force_partition, geometry_from_result,
+                     partition_dp, retune_tiling)
+from .session import (DataflowStudy, NetworkParetoPoint, NetworkReport,
+                      NetworkSession, dataflow_study, geomean,
+                      report_to_json)
+
+__all__ = [
+    "LayerNode", "LayerClass", "LayerGraph", "conv_graph", "vgg16_graph",
+    "resnet50_graph", "model_config_graph", "layer_gemm_slots",
+    "ArrayGeometry", "AssignConfig", "Assignment", "TilingFit",
+    "geometry_from_result", "retune_tiling", "partition_dp",
+    "brute_force_partition",
+    "NetworkSession", "NetworkReport", "NetworkParetoPoint",
+    "DataflowStudy", "dataflow_study", "geomean", "report_to_json",
+]

@@ -1,0 +1,320 @@
+"""Layer -> array assignment search (uniform and heterogeneous).
+
+The network-level question (paper Figs. 11/13/14): how much does one
+systolic array shared across all layers lose against per-layer optima,
+and how much does a small number of specialized arrays recover?
+
+Model.  The fabric hosts **one array at a time** under the full resource
+budget; switching a segment boundary to a different array is a partial
+reconfiguration charged ``reconfig_cycles``, amortized over
+``amortize_over`` inferences (steady-state serving pipelines a batch of
+inputs through each segment before the fabric switches; a single
+batch-1 forward pass rarely pays for a switch on its own).  An
+*assignment* maps every layer (graph node, network order) to one
+candidate array; its per-inference cost is
+
+    sum_l count_l * cost(l, cand_l)  +  (num_segments - 1) * reconfig
+
+where segments are maximal runs of the same candidate.  ``K = 1``
+reduces to the uniform single-array deployment; ``K = num layers``
+with ``reconfig_cycles = 0`` recovers the per-layer optima.  Because
+the cost is additive over a prefix, the exact optimum is a small DP
+over (node, segments used, last candidate) — no beam needed;
+``brute_force_partition`` cross-checks it on toy graphs.
+
+Candidates are concrete :class:`ArrayGeometry`s (dataflow, permutation,
+PE-array dims, SIMD width), normally harvested from the per-class sweep
+winners.  ``retune_tiling`` re-tunes a layer's *tiling* (time tiles,
+latency-hiding factors, tile counts) under a candidate's fixed geometry
+— the array is frozen hardware, the schedule is still free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import random
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.descriptor import build_descriptor
+from repro.core.design_space import Genome, GenomeSpace, Permutation
+from repro.core.hardware import HardwareProfile, U250
+from repro.core.perf_model import BatchPerformanceModel, PerformanceModel
+from repro.core.workloads import Workload
+
+
+# ---------------------------------------------------------------------- #
+# Candidate arrays
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class ArrayGeometry:
+    """A concrete array: design choice + frozen physical shape."""
+
+    dataflow: Tuple[str, ...]
+    perm: Permutation
+    pe_dims: Tuple[int, ...]        # n1 of each space loop
+    simd: int                       # SIMD lanes per PE
+
+    @property
+    def num_pes(self) -> int:
+        n = 1
+        for d in self.pe_dims:
+            n *= d
+        return n
+
+    def dsp(self, hw: HardwareProfile) -> int:
+        return self.num_pes * self.simd * hw.dsp_per_lane
+
+    def label(self) -> str:
+        dims = "x".join(str(d) for d in self.pe_dims)
+        return (f"[{','.join(self.dataflow)}] {self.perm.label()} "
+                f"{dims} simd{self.simd}")
+
+    def compatible(self, wl: Workload) -> bool:
+        """The geometry's loops must exist in the workload."""
+        names = set(wl.loop_names)
+        return set(self.dataflow) <= names and \
+            set(self.perm.order) == names
+
+
+def geometry_from_result(res) -> ArrayGeometry:
+    """Freeze a ``DesignResult`` winner into a candidate array."""
+    g = res.evo.best
+    return ArrayGeometry(
+        dataflow=tuple(res.design.dataflow),
+        perm=res.design.permutation,
+        pe_dims=tuple(g.triples[l][1] for l in res.design.dataflow),
+        simd=g.t2(res.descriptor.workload.simd_loop),
+    )
+
+
+# ---------------------------------------------------------------------- #
+# Per-layer tiling re-tune under a fixed geometry
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class TilingFit:
+    """Best schedule of one layer on one frozen array."""
+
+    genome: Genome
+    latency_cycles: float
+    throughput: float
+    dsp: int
+    bram: int
+    feasible: bool
+
+
+def _project(space: GenomeSpace, wl: Workload, geom: ArrayGeometry,
+             g: Genome) -> Genome:
+    """Clamp a genome onto the geometry: space-loop n1 and SIMD n2 are the
+    array's, everything else stays free.  A layer whose bound is smaller
+    than an array dim runs on the clamped sub-array (underutilization —
+    the paper's CONV1 case)."""
+    t = dict(g.triples)
+    for l, n1 in zip(geom.dataflow, geom.pe_dims):
+        bound = wl.loop(l).bound
+        n1c = max(1, min(n1, bound))
+        n0, _, n2 = t[l]
+        n2c = max(1, min(n2, max(1, bound // n1c)))
+        t[l] = (n0, n1c, n2c)
+    sl = wl.simd_loop
+    bound = wl.loop(sl).bound
+    n0, n1, _ = t[sl]        # n1 is the clamped PE dim if sl is spatial
+    n2c = max(1, min(geom.simd, max(1, bound // max(1, n1))))
+    t[sl] = (n0, n1, n2c)
+    return space.legalize(Genome(t))
+
+
+def retune_tiling(wl: Workload, geom: ArrayGeometry,
+                  hw: HardwareProfile = U250, evals: int = 240,
+                  seed: int = 0,
+                  seeds: Sequence[Genome] = ()) -> TilingFit:
+    """Search the layer's tiling under ``geom``'s frozen array.
+
+    A small projected evolutionary loop: every sampled/mutated genome is
+    snapped onto the geometry before evaluation, so the search only
+    moves the free schedule dimensions.  ``seeds`` (e.g. the winner
+    genome the geometry was frozen from) join the initial population.
+    """
+    space = GenomeSpace(wl, geom.dataflow)
+    desc = build_descriptor(wl, geom.dataflow, geom.perm)
+    model = PerformanceModel(desc, hw)
+    batch = BatchPerformanceModel(desc, hw)
+    rng = random.Random(seed)
+
+    pop_size = max(8, min(32, evals // 4))
+    pop = [_project(space, wl, geom, s) for s in seeds]
+    while len(pop) < pop_size:
+        pop.append(_project(space, wl, geom, space.sample(rng)))
+
+    best_g: Optional[Genome] = None
+    best_f = -float("inf")
+    spent = 0
+    while spent < evals:
+        ev = batch.evaluate(pop)
+        spent += len(pop)
+        i = int(np.argmax(ev.fitness))
+        if ev.fitness[i] > best_f:
+            best_f = float(ev.fitness[i])
+            best_g = pop[i]
+        order = np.argsort(-ev.fitness)
+        parents = [pop[int(j)] for j in order[:max(2, pop_size // 4)]]
+        nxt = parents[:2]
+        while len(nxt) < pop_size:
+            if rng.random() < 0.6:
+                child = space.crossover(rng.choice(parents),
+                                        rng.choice(parents), rng)
+            else:
+                child = space.mutate(rng.choice(parents), rng)
+            nxt.append(_project(space, wl, geom, child))
+        pop = nxt
+
+    assert best_g is not None
+    rep = model.latency(best_g)
+    res = model.resources(best_g)
+    return TilingFit(genome=best_g, latency_cycles=rep.cycles,
+                     throughput=model.throughput(best_g),
+                     dsp=res.dsp, bram=res.bram,
+                     feasible=model.feasible(best_g))
+
+
+# ---------------------------------------------------------------------- #
+# Partitioning: exact DP over (node, segments, last candidate)
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AssignConfig:
+    max_arrays: int = 2             # K: segment budget
+    reconfig_cycles: float = 3.0e5  # fabric switch cost (~1 ms at 300 MHz)
+    # steady-state serving amortization: inferences pipelined through each
+    # segment before the fabric switches, so one reconfiguration sweep is
+    # shared by this many forward passes.  1 = a single batch-1 inference
+    # pays every switch (reconfiguration rarely wins there).
+    amortize_over: int = 1
+    retune_evals: int = 240         # per (class, candidate) tiling search
+    seed: int = 0
+
+    @property
+    def effective_reconfig_cycles(self) -> float:
+        return self.reconfig_cycles / max(1, self.amortize_over)
+
+
+@dataclasses.dataclass
+class Assignment:
+    """A layer->array mapping and its end-to-end cost."""
+
+    choice: List[int]               # candidate index per node
+    segments: List[Tuple[int, int, int]]   # (start, end_excl, cand idx)
+    compute_cycles: float           # sum of per-layer execution cycles
+    reconfig_cycles: float          # (num_segments - 1) * per-switch cost
+    n_arrays: int
+
+    @property
+    def latency_cycles(self) -> float:
+        return self.compute_cycles + self.reconfig_cycles
+
+
+def _segments_of(choice: Sequence[int]) -> List[Tuple[int, int, int]]:
+    segs: List[Tuple[int, int, int]] = []
+    start = 0
+    for i in range(1, len(choice) + 1):
+        if i == len(choice) or choice[i] != choice[i - 1]:
+            segs.append((start, i, choice[start]))
+            start = i
+    return segs
+
+
+def _assignment(choice: Sequence[int], node_cost: np.ndarray,
+                reconfig: float) -> Assignment:
+    segs = _segments_of(choice)
+    compute = float(sum(node_cost[l, c] for l, c in enumerate(choice)))
+    return Assignment(choice=list(choice), segments=segs,
+                      compute_cycles=compute,
+                      reconfig_cycles=(len(segs) - 1) * reconfig,
+                      n_arrays=len(segs))
+
+
+def partition_dp(cost: np.ndarray, counts: Sequence[int],
+                 reconfig_cycles: float, max_arrays: int) -> Assignment:
+    """Optimal <=``max_arrays``-segment assignment.
+
+    ``cost[l, c]`` is one execution of node ``l`` on candidate ``c``
+    (``inf`` = infeasible); ``counts[l]`` multiplies it.  Exact DP:
+    ``dp[k][c]`` = best cost of the processed prefix whose last segment
+    is the ``k``-th and runs candidate ``c``.
+    """
+    L, C = cost.shape
+    if L == 0:
+        raise ValueError("empty graph")
+    K = max(1, min(max_arrays, L))
+    node_cost = cost * np.asarray(counts, dtype=np.float64)[:, None]
+    INF = float("inf")
+
+    dp = np.full((K + 1, C), INF)
+    dp[1] = node_cost[0]
+    # back[l][k][c] = candidate of node l-1 in the optimal prefix
+    back = np.full((L, K + 1, C), -1, dtype=np.int64)
+
+    for l in range(1, L):
+        ndp = np.full_like(dp, INF)
+        for k in range(1, K + 1):
+            # stay in the same segment
+            stay = dp[k]
+            # open a new segment: best over previous candidates != c
+            if k > 1:
+                prev = dp[k - 1]
+                best = np.argsort(prev)[:2]    # top-2 trick for c' != c
+                open_cost = np.full(C, INF)
+                open_from = np.full(C, -1, dtype=np.int64)
+                for c in range(C):
+                    for b in best:
+                        if int(b) != c and prev[b] < INF:
+                            open_cost[c] = prev[b] + reconfig_cycles
+                            open_from[c] = int(b)
+                            break
+            for c in range(C):
+                s = stay[c]
+                o = open_cost[c] if k > 1 else INF
+                if s <= o:
+                    if s < INF:
+                        ndp[k, c] = s + node_cost[l, c]
+                        back[l, k, c] = c
+                else:
+                    ndp[k, c] = o + node_cost[l, c]
+                    back[l, k, c] = open_from[c]
+        dp = ndp
+
+    flat = np.argwhere(dp < INF)
+    if flat.size == 0:
+        raise ValueError("no feasible assignment (all costs inf)")
+    k_best, c_best = min(((int(k), int(c)) for k, c in flat),
+                         key=lambda kc: dp[kc[0], kc[1]])
+    # reconstruct
+    choice = [0] * L
+    k, c = k_best, c_best
+    for l in range(L - 1, 0, -1):
+        choice[l] = c
+        pc = int(back[l, k, c])
+        if pc != c:
+            k -= 1
+        c = pc
+    choice[0] = c
+    return _assignment(choice, node_cost, reconfig_cycles)
+
+
+def brute_force_partition(cost: np.ndarray, counts: Sequence[int],
+                          reconfig_cycles: float, max_arrays: int
+                          ) -> Assignment:
+    """Exhaustive reference (C^L assignments) for validating the DP."""
+    L, C = cost.shape
+    node_cost = cost * np.asarray(counts, dtype=np.float64)[:, None]
+    best: Optional[Assignment] = None
+    for choice in itertools.product(range(C), repeat=L):
+        a = _assignment(choice, node_cost, reconfig_cycles)
+        if a.n_arrays > max_arrays or not np.isfinite(a.latency_cycles):
+            continue
+        if best is None or a.latency_cycles < best.latency_cycles:
+            best = a
+    if best is None:
+        raise ValueError("no feasible assignment (all costs inf)")
+    return best

@@ -1,0 +1,336 @@
+"""NetworkSession: whole-network DSE on top of the per-workload stack.
+
+Flow (DESIGN.md §11):
+
+  1. **Dedup** — the graph's shape classes (``LayerGraph.classes``): a
+     32-layer model or a 13-layer CNN tunes each unique workload once.
+  2. **Per-class sweeps** — one :class:`repro.core.SearchSession` per
+     class, sharing the design registry: exact fingerprint hits return
+     cached sweeps with zero evals (the serving pre-tune path), near
+     misses transfer-seed the search.
+  3. **Candidates** — each class winner is frozen into an
+     :class:`~.assign.ArrayGeometry`; every (class, candidate) pair gets
+     a fixed-geometry tiling re-tune (memoized).
+  4. **Assignment** — exact DP (``assign.partition_dp``) solves the
+     uniform (K=1) and heterogeneous (K>=2) layer->array partitions
+     under the reconfiguration-cost model, and the session composes
+     end-to-end network latency plus a (latency, DSP, BRAM) frontier.
+
+``dataflow_study`` is the paper-parity path (Figs. 11/13/14): per-class
+``tune_design`` under each dataflow with the ordering fixed to the
+paper's ``<[o,h,w],[i,p,q]>``, expanded back to per-layer lists —
+``benchmarks/paper_cnn.py`` delegates here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.engine import SearchSession, SessionConfig
+from repro.core.evolutionary import EvoConfig
+from repro.core.hardware import HardwareProfile, U250
+from repro.core.design_space import enumerate_dataflows, pruned_permutations
+from repro.core.tuner import TuneReport, tune_design
+
+from .assign import (ArrayGeometry, AssignConfig, Assignment, TilingFit,
+                     geometry_from_result, partition_dp, retune_tiling)
+from .graph import ClassKey, LayerGraph
+
+
+def geomean(xs: Sequence[float]) -> float:
+    return math.exp(sum(math.log(max(x, 1e-12)) for x in xs) / len(xs))
+
+
+# ---------------------------------------------------------------------- #
+# Paper-parity study: shared dataflow, per-layer tiling fully re-tuned
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class DataflowStudy:
+    """Figs. 11/13/14 material: per-(dataflow, layer) best throughput."""
+
+    table: Dict[str, List[float]]   # dataflow label -> per-layer throughput
+    geomean: Dict[str, float]       # dataflow label -> geomean frac of peak
+    best: str                       # dataflow with the highest geomean
+    peak: List[float]               # per-layer peak across dataflows
+
+
+def dataflow_study(graph: LayerGraph, cfg: Optional[EvoConfig] = None,
+                   hw: HardwareProfile = U250,
+                   inner: Sequence[str] = ("i", "p", "q")) -> DataflowStudy:
+    """Single-dataflow loss vs per-layer peak, ordering fixed to
+    ``<..., [inner]>`` (the paper's Fig. 13 setup).
+
+    Tunes once per *shape class* and expands to per-layer lists, so the
+    numbers are identical to the historical per-layer loop (duplicate
+    layers always re-tuned to the same optimum) at a fraction of the
+    evals.
+    """
+    cfg = cfg or EvoConfig()
+    classes = graph.classes()
+    wl0 = graph.nodes[0].wl
+    dataflows = enumerate_dataflows(wl0)
+    perm = [p for p in pruned_permutations(wl0)
+            if set(p.inner) == set(inner)][0]
+
+    per_class: Dict[Tuple[str, ClassKey], float] = {}
+    for df in dataflows:
+        for key, cls in classes.items():
+            res = tune_design(cls.wl, df, perm, hw=hw, cfg=cfg)
+            per_class[("+".join(df), key)] = res.throughput
+
+    table: Dict[str, List[float]] = {}
+    for df in dataflows:
+        label = "+".join(df)
+        row: List[float] = []
+        for n in graph.nodes:
+            row += [per_class[(label, n.key)]] * n.count
+        table[label] = row
+    n_layers = len(next(iter(table.values())))
+    peak = [max(table[d][i] for d in table) for i in range(n_layers)]
+    geo = {d: geomean([table[d][i] / peak[i] for i in range(n_layers)])
+           for d in table}
+    best = max(geo, key=geo.get)
+    return DataflowStudy(table=table, geomean=geo, best=best, peak=peak)
+
+
+# ---------------------------------------------------------------------- #
+# Network report
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class NetworkParetoPoint:
+    """One non-dominated deployment on the (latency, DSP, BRAM) frontier."""
+
+    label: str
+    latency_cycles: float
+    dsp: int                        # largest array the fabric must host
+    bram: int
+    n_arrays: int
+
+
+@dataclasses.dataclass
+class NetworkReport:
+    graph: Dict
+    classes: Dict[str, Dict]        # class name -> summary
+    candidates: List[str]           # candidate array labels
+    per_layer_cycles: float         # sum of per-class optima (ideal)
+    assignments: Dict[int, Dict]    # K -> assignment summary
+    pareto: List[NetworkParetoPoint]
+    total_evals: int                # evolutionary evals spent (0 if cached)
+
+    @property
+    def uniform_cycles(self) -> float:
+        return self.assignments[1]["latency_cycles"]
+
+    def recovered_frac(self, k: int) -> float:
+        """Fraction of the uniform-vs-per-layer loss a K-array partition
+        recovers (0 = none, 1 = reaches the per-layer ideal)."""
+        uni = self.uniform_cycles
+        gap = uni - self.per_layer_cycles
+        if gap <= 0:
+            return 1.0
+        return (uni - self.assignments[k]["latency_cycles"]) / gap
+
+    def as_json(self) -> Dict:
+        return {
+            "graph": self.graph,
+            "classes": self.classes,
+            "candidates": self.candidates,
+            "per_layer_cycles": self.per_layer_cycles,
+            "assignments": self.assignments,
+            "pareto": [dataclasses.asdict(p) for p in self.pareto],
+            "total_evals": self.total_evals,
+        }
+
+
+# ---------------------------------------------------------------------- #
+# The session
+# ---------------------------------------------------------------------- #
+class NetworkSession:
+    """Tune a whole :class:`LayerGraph` and solve its array assignment.
+
+    >>> sess = NetworkSession(vgg16_graph(), registry=store)
+    >>> report = sess.run(k_values=(1, 2, 4))
+    >>> report.uniform_cycles / report.per_layer_cycles
+
+    With a registry attached the per-class sweeps hit the persistent
+    cache: a warm second run (same graph, same hardware) reports
+    ``total_evals == 0``.
+    """
+
+    def __init__(self, graph: LayerGraph, hw: HardwareProfile = U250,
+                 cfg: Optional[EvoConfig] = None,
+                 registry=None,
+                 session: Optional[SessionConfig] = None,
+                 assign: Optional[AssignConfig] = None):
+        if len(graph) == 0:
+            raise ValueError("empty LayerGraph")
+        self.graph = graph
+        self.hw = hw
+        self.cfg = cfg or EvoConfig()
+        self.registry = registry
+        # serial by default: network sessions run inside benchmarks/CLIs
+        # where the per-class sweep is already the parallel unit
+        self.session = session or SessionConfig(executor="serial")
+        self.assign = assign or AssignConfig()
+        self._classes = graph.classes()
+        self._reports: Dict[ClassKey, TuneReport] = {}
+        self._fits: Dict[Tuple[ClassKey, int], TilingFit] = {}
+        self._candidates: List[ArrayGeometry] = []
+
+    # -- stage 1+2: per-class sweeps -----------------------------------
+    def tune_classes(self) -> Dict[ClassKey, TuneReport]:
+        for key, cls in self._classes.items():
+            if key in self._reports:
+                continue
+            sess = SearchSession(cls.wl, hw=self.hw, cfg=self.cfg,
+                                 registry=self.registry,
+                                 session=self.session)
+            self._reports[key] = sess.run()
+        return self._reports
+
+    # -- stage 3: candidate arrays + cost matrix -----------------------
+    def candidates(self) -> List[ArrayGeometry]:
+        if self._candidates:
+            return self._candidates
+        self.tune_classes()
+        seen = set()
+        for key in self._classes:
+            best = self._reports[key].best
+            geom = geometry_from_result(best)
+            tag = (geom.dataflow, geom.perm.order, geom.pe_dims, geom.simd)
+            if tag not in seen:
+                seen.add(tag)
+                self._candidates.append(geom)
+        return self._candidates
+
+    def _fit(self, key: ClassKey, ci: int) -> TilingFit:
+        memo_key = (key, ci)
+        if memo_key not in self._fits:
+            cls = self._classes[key]
+            geom = self._candidates[ci]
+            if not geom.compatible(cls.wl):
+                raise ValueError(
+                    f"candidate {geom.label()} incompatible with "
+                    f"{cls.wl.name} (mixed-kind graph?)")
+            # seed with this class's own tuned genome for the candidate's
+            # design, when the sweep searched it
+            seeds = [r.evo.best for r in self._reports[key].results
+                     if tuple(r.design.dataflow) == geom.dataflow
+                     and r.design.permutation.order == geom.perm.order]
+            self._fits[memo_key] = retune_tiling(
+                cls.wl, geom, hw=self.hw, evals=self.assign.retune_evals,
+                seed=self.assign.seed, seeds=seeds[:2])
+        return self._fits[memo_key]
+
+    def cost_matrix(self) -> np.ndarray:
+        """cost[l, c]: cycles of one execution of node l on candidate c
+        (inf when the re-tuned schedule is infeasible on the fabric)."""
+        cands = self.candidates()
+        cost = np.full((len(self.graph), len(cands)), np.inf)
+        for l, node in enumerate(self.graph.nodes):
+            for ci in range(len(cands)):
+                fit = self._fit(node.key, ci)
+                if fit.feasible:
+                    cost[l, ci] = fit.latency_cycles
+        return cost
+
+    # -- stage 4: assignment + composition -----------------------------
+    def per_layer_cycles(self) -> float:
+        """The ideal: every layer on its best candidate array with free
+        reconfiguration — the lower bound every assignment is measured
+        against (equals ``solve(len(graph))`` at zero reconfig cost).
+
+        Computed from the same cost matrix the DP consumes, so it is a
+        true bound even under tiny search budgets where a fixed-geometry
+        re-tune can out-tune a class sweep's own winner."""
+        cost = self.cost_matrix()
+        counts = np.asarray([n.count for n in self.graph.nodes],
+                            dtype=np.float64)
+        return float((cost.min(axis=1) * counts).sum())
+
+    def solve(self, k: int) -> Assignment:
+        counts = [n.count for n in self.graph.nodes]
+        return partition_dp(self.cost_matrix(), counts,
+                            self.assign.effective_reconfig_cycles, k)
+
+    def _assignment_resources(self, a: Assignment) -> Tuple[int, int]:
+        dsp = bram = 0
+        for l, node in enumerate(self.graph.nodes):
+            fit = self._fit(node.key, a.choice[l])
+            dsp = max(dsp, fit.dsp)
+            bram = max(bram, fit.bram)
+        return dsp, bram
+
+    def _assignment_summary(self, a: Assignment) -> Dict:
+        cands = self.candidates()
+        dsp, bram = self._assignment_resources(a)
+        return {
+            "latency_cycles": a.latency_cycles,
+            "compute_cycles": a.compute_cycles,
+            "reconfig_cycles": a.reconfig_cycles,
+            "n_arrays": a.n_arrays,
+            "segments": [{"start": s, "end": e,
+                          "array": cands[c].label()}
+                         for s, e, c in a.segments],
+            "dsp": dsp,
+            "bram": bram,
+        }
+
+    def run(self, k_values: Sequence[int] = (1, 2, 4)) -> NetworkReport:
+        self.tune_classes()
+        per_layer = self.per_layer_cycles()
+        k_values = sorted({max(1, k) for k in k_values})
+        assignments: Dict[int, Dict] = {}
+        points: List[NetworkParetoPoint] = []
+        for k in k_values:
+            a = self.solve(k)
+            assignments[k] = self._assignment_summary(a)
+            dsp, bram = self._assignment_resources(a)
+            points.append(NetworkParetoPoint(
+                label=f"K={k}", latency_cycles=a.latency_cycles,
+                dsp=dsp, bram=bram, n_arrays=a.n_arrays))
+
+        def dominated(p, q):
+            le = (q.latency_cycles <= p.latency_cycles and q.dsp <= p.dsp
+                  and q.bram <= p.bram)
+            lt = (q.latency_cycles < p.latency_cycles or q.dsp < p.dsp
+                  or q.bram < p.bram)
+            return le and lt
+
+        pareto = [p for p in points
+                  if not any(dominated(p, q) for q in points if q is not p)]
+
+        classes = {}
+        total_evals = 0
+        for key, cls in self._classes.items():
+            rep = self._reports[key]
+            evals = sum(r.evo.evals for r in rep.results)
+            total_evals += evals
+            best = rep.best
+            classes[cls.wl.name] = {
+                "count": cls.count,
+                "best_design": best.design.label(),
+                "latency_cycles": best.latency_cycles,
+                "throughput_gflops": best.throughput / 1e9,
+                "evals": evals,
+                "from_cache": rep.from_cache,
+            }
+        return NetworkReport(
+            graph=self.graph.summary(),
+            classes=classes,
+            candidates=[c.label() for c in self.candidates()],
+            per_layer_cycles=per_layer,
+            assignments=assignments,
+            pareto=pareto,
+            total_evals=total_evals,
+        )
+
+
+def report_to_json(report: NetworkReport, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report.as_json(), f, indent=2, default=str)

@@ -78,8 +78,15 @@ def workload_fingerprint(wl: Workload, hw: HardwareProfile,
         "version": FINGERPRINT_VERSION,
         "loops": [{"name": l.name, "parallel": l.parallel}
                   for l in wl.loops],
-        "arrays": [{"name": a.name, "dims": [list(d) for d in a.dims],
-                    "is_output": a.is_output} for a in wl.arrays],
+        # coeffs (subscript strides) are folded in only when non-unit, so
+        # pre-stride records keep their digests while a stride-2 conv can
+        # never collide with the stride-1 conv of the same loop bounds
+        "arrays": [dict({"name": a.name, "dims": [list(d) for d in a.dims],
+                         "is_output": a.is_output},
+                        **({"coeffs": [list(a.dim_coeffs(i))
+                                       for i in range(len(a.dims))]}
+                           if a.has_strides else {}))
+                   for a in wl.arrays],
         "spatial_candidates": list(wl.spatial_candidates),
         "simd_loop": wl.simd_loop,
         "simd_max": wl.simd_max,

@@ -48,25 +48,18 @@ class ServeConfig:
 def model_gemm_shapes(mcfg, cfg: "ServeConfig") -> List[Tuple[int, int, int]]:
     """The (M, N, K) GEMMs a serving step issues, prefill and decode.
 
-    M is the token-parallel dim: ``max_batch * max_seq`` at prefill,
-    ``max_batch`` at decode; N/K walk the projection, MLP and LM-head
-    weights.  Degenerate dims (e.g. ``d_ff == 0`` on pure-SSM configs)
-    are skipped.
+    Delegates to the network-level layer graph
+    (``repro.network.model_config_graph``, DESIGN.md §11) — the same
+    single source of truth ``launch/serve.py --pretune`` resolves — so
+    engine provisioning and the pre-tune pass can never diverge.  M is
+    the token-parallel dim: ``max_batch * max_seq`` at prefill,
+    ``max_batch`` at decode; N/K walk the exact per-layer projection,
+    MLP/MoE, SSM and LM-head weights.
     """
-    shapes: List[Tuple[int, int, int]] = []
-    for M in (cfg.max_batch * cfg.max_seq, cfg.max_batch):
-        shapes += [
-            (M, mcfg.d_model, mcfg.d_model),      # QKV / output projections
-            (M, mcfg.d_ff, mcfg.d_model),         # MLP up
-            (M, mcfg.d_model, mcfg.d_ff),         # MLP down
-            (M, mcfg.vocab_size, mcfg.d_model),   # LM head
-        ]
-    seen, out = set(), []
-    for s in shapes:
-        if min(s) > 0 and s not in seen:
-            seen.add(s)
-            out.append(s)
-    return out
+    from repro.network.graph import model_config_graph
+    graph = model_config_graph(mcfg, batch=cfg.max_batch,
+                               prefill_len=cfg.max_seq)
+    return graph.gemm_shapes()
 
 
 def build_prefill_step(model: Model) -> Callable:

@@ -113,3 +113,91 @@ def test_simulator_exact_vs_sampled():
     exact = simulate(desc, g, U250).cycles
     sampled = simulate(desc, g, U250, max_tiles=64).cycles
     assert abs(exact - sampled) / exact < 0.05
+
+
+# ---------------------------------------------------------------------- #
+# Strided convolution (ResNet50 downsampling cores)
+# ---------------------------------------------------------------------- #
+def _strided_cnn():
+    from repro.core import conv2d
+    return conv2d(16, 16, 8, 8, 3, 3, stride=2)
+
+
+def test_stride2_tile_extents_and_macs():
+    """fi tiles cover exactly s*(T_h-1) + T_p per spatial dim (the last
+    tap of a stride-s window lands at s*(T_h-1) + T_p - 1); MACs are the
+    loop product (h/w are output extents, so stride never changes the
+    MAC count)."""
+    from repro.core import conv2d
+    wl = _strided_cnn()
+    assert wl.name.endswith("_s2")
+    assert wl.total_macs() == 16 * 16 * 8 * 8 * 3 * 3
+    df = ("o", "h")
+    perm = [p for p in pruned_permutations(wl)
+            if set(p.inner) == {"i", "p", "q"}][0]
+    desc = build_descriptor(wl, df, perm)
+    space = GenomeSpace(wl, df)
+    g = space.legalize(Genome({"o": (1, 8, 2), "h": (2, 4, 1),
+                               "w": (2, 4, 1), "i": (2, 8, 1),
+                               "p": (1, 3, 1), "q": (1, 3, 1)}))
+    fi = desc.array_info("fi")
+    # (i) x (2*(T_h-1) + T_p) x (2*(T_w-1) + T_q)
+    assert desc.tile_elems(fi, g) == g.t1("i") \
+        * (2 * (g.t1("h") - 1) + 3) * (2 * (g.t1("w") - 1) + 3)
+    # stride-1 twin is strictly smaller on chip
+    wl1 = conv2d(16, 16, 8, 8, 3, 3, stride=1)
+    desc1 = build_descriptor(wl1, df, perm)
+    assert desc1.tile_elems(desc1.array_info("fi"), g) \
+        < desc.tile_elems(fi, g)
+
+
+def test_stride2_model_vs_simulator():
+    """Fig. 6-style regression at stride 2: the analytical model tracks the
+    cycle-level simulator as tightly as at stride 1."""
+    wl = _strided_cnn()
+    rng = random.Random(0)
+    errs = []
+    from repro.core import enumerate_designs
+    for df, perm in enumerate_designs(wl)[:8]:
+        desc = build_descriptor(wl, df, perm)
+        model = PerformanceModel(desc, U250)
+        space = GenomeSpace(wl, df)
+        for _ in range(3):
+            g = space.sample(rng)
+            errs.append(abs(model.latency_cycles(g)
+                            - simulate(desc, g, U250).cycles)
+                        / simulate(desc, g, U250).cycles)
+    assert sum(errs) / len(errs) < 0.05
+    assert max(errs) < 0.12
+
+
+def test_stride2_batch_and_generated_source_parity():
+    """Batch evaluator and the emitted model file honor strided windows."""
+    import numpy as np
+    from repro.core import BatchPerformanceModel, enumerate_designs
+    wl = _strided_cnn()
+    rng = random.Random(1)
+    df, perm = enumerate_designs(wl)[5]
+    desc = build_descriptor(wl, df, perm)
+    model = PerformanceModel(desc, U250)
+    space = GenomeSpace(wl, df)
+    gs = [space.sample(rng) for _ in range(6)]
+    batch = BatchPerformanceModel(desc, U250)
+    assert np.array_equal(batch.latency_cycles(gs),
+                          np.array([model.latency_cycles(g) for g in gs]))
+    ns = {}
+    exec(compile(generate_model_source(desc, U250), "<gen>", "exec"), ns)
+    for g in gs:
+        assert abs(ns["latency"](g.triples) - model.latency_cycles(g)) \
+            <= 1e-6 * model.latency_cycles(g)
+
+
+def test_stride2_fingerprint_distinct():
+    """A stride-2 conv must never collide with the stride-1 conv of the
+    same loop bounds in the design registry."""
+    from repro.core import conv2d
+    from repro.registry import workload_fingerprint
+    f1 = workload_fingerprint(conv2d(16, 16, 8, 8, 3, 3, stride=1), U250)
+    f2 = workload_fingerprint(conv2d(16, 16, 8, 8, 3, 3, stride=2), U250)
+    assert f1.digest != f2.digest
+    assert f1.family != f2.family      # not even transfer-comparable
