@@ -23,24 +23,25 @@ def main() -> None:
                     help="skip the multi-minute network studies")
     args = ap.parse_args()
 
-    from . import (network_dse, paper_mm, paper_cnn, registry_warmstart,
-                   roofline, search_speed, serving_throughput)
-
+    # module:function, imported lazily per selected bench — a filtered
+    # run must not import the others' dependencies (e.g. the TPU benches
+    # pull in jax, whose threads would force the search-speed sweep's
+    # process pool onto the expensive spawn start method)
     benches = [
-        ("search_speed", search_speed.bench_search_speed),
-        ("registry_warmstart", registry_warmstart.bench_registry_warmstart),
-        ("serving_throughput", serving_throughput.bench_serving_throughput),
-        ("network_dse", network_dse.bench_network_dse),
-        ("table2", paper_mm.bench_table2),
-        ("fig1_fig15", paper_mm.bench_fig1_fig15),
-        ("table3", paper_mm.bench_table3),
-        ("table4_fig5", paper_mm.bench_table4_fig5),
-        ("fig6", paper_cnn.bench_fig6),
-        ("fig7_8_9", paper_mm.bench_fig7_8_9),
-        ("fig10_table6", paper_mm.bench_fig10_table6),
-        ("fig11_13_14_table7", paper_cnn.bench_fig11_13_14),
-        ("roofline_table", roofline.bench_roofline_table),
-        ("kernel_autotune", roofline.bench_kernel_autotune),
+        ("search_speed", "search_speed:bench_search_speed"),
+        ("registry_warmstart", "registry_warmstart:bench_registry_warmstart"),
+        ("serving_throughput", "serving_throughput:bench_serving_throughput"),
+        ("network_dse", "network_dse:bench_network_dse"),
+        ("table2", "paper_mm:bench_table2"),
+        ("fig1_fig15", "paper_mm:bench_fig1_fig15"),
+        ("table3", "paper_mm:bench_table3"),
+        ("table4_fig5", "paper_mm:bench_table4_fig5"),
+        ("fig6", "paper_cnn:bench_fig6"),
+        ("fig7_8_9", "paper_mm:bench_fig7_8_9"),
+        ("fig10_table6", "paper_mm:bench_fig10_table6"),
+        ("fig11_13_14_table7", "paper_cnn:bench_fig11_13_14"),
+        ("roofline_table", "roofline:bench_roofline_table"),
+        ("kernel_autotune", "roofline:bench_kernel_autotune"),
     ]
     # network_dse runs the whole-graph studies: multi-minute, like the
     # fig11_13_14 network sweeps (its CI entry is the --smoke CLI)
@@ -48,7 +49,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = []
-    for name, fn in benches:
+    for name, spec in benches:
         if args.only and not any(tok in name
                                  for tok in args.only.split(",")):
             continue
@@ -56,6 +57,10 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
+            import importlib
+            mod_name, fn_name = spec.split(":")
+            fn = getattr(importlib.import_module(f"benchmarks.{mod_name}"),
+                         fn_name)
             fn()
         except Exception as e:  # noqa: BLE001 — report, keep benching
             failures.append((name, repr(e)))

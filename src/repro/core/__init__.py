@@ -12,15 +12,17 @@ from .workloads import (Workload, Loop, ArrayRef, matmul, conv2d,
                         VGG16_LAYERS, RESNET50_LAYERS)
 from .design_space import (Genome, GenomeSpace, Permutation, DesignPoint,
                            enumerate_dataflows, pruned_permutations,
-                           all_permutations, enumerate_designs, divisors)
+                           all_permutations, enumerate_designs, divisors,
+                           genomes_to_matrix, matrix_to_genomes,
+                           genome_from_row)
 from .descriptor import (DesignDescriptor, build_descriptor,
                          descriptor_to_json)
 from .perf_model import (PerformanceModel, BatchPerformanceModel,
                          BatchEvaluation, Resources, LatencyReport,
                          generate_model_source)
 from .simulator import simulate, SimReport
-from .evolutionary import (EvoConfig, EvoResult, Problem, TilingProblem,
-                           evolve)
+from .evolutionary import (EvoConfig, EvoResult, Problem, SoaHandle,
+                           TilingProblem, evolve)
 from . import mp_solver, baselines
 from .tuner import tune_design, tune_workload, TuneReport, DesignResult
 from .engine import (SearchSession, SessionConfig, ParetoPoint,
@@ -34,11 +36,13 @@ __all__ = [
     "Genome", "GenomeSpace", "Permutation", "DesignPoint",
     "enumerate_dataflows", "pruned_permutations", "all_permutations",
     "enumerate_designs", "divisors",
+    "genomes_to_matrix", "matrix_to_genomes", "genome_from_row",
     "DesignDescriptor", "build_descriptor", "descriptor_to_json",
     "PerformanceModel", "BatchPerformanceModel", "BatchEvaluation",
     "Resources", "LatencyReport", "generate_model_source",
     "simulate", "SimReport",
-    "EvoConfig", "EvoResult", "Problem", "TilingProblem", "evolve",
+    "EvoConfig", "EvoResult", "Problem", "SoaHandle", "TilingProblem",
+    "evolve",
     "mp_solver", "baselines",
     "tune_design", "tune_workload", "TuneReport", "DesignResult",
     "SearchSession", "SessionConfig", "ParetoPoint", "pareto_frontier",

@@ -24,6 +24,7 @@ This module mirrors the paper's §3:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import math
 import random
@@ -34,6 +35,42 @@ import numpy as np
 from .workloads import Workload
 
 Triple = Tuple[int, int, int]
+
+
+# ---------------------------------------------------------------------- #
+# Stream-exact cheap replicas of the ``random.Random`` draws used by the
+# genome operators.  The SoA fast path makes the *same* underlying
+# ``getrandbits`` calls as the scalar operators' ``choice``/``sample``/
+# ``randint`` so a fixed seed walks the identical genome stream through
+# either path (tests/test_batch_equivalence.py pins this), at a fraction
+# of the per-call cost (``rng.sample(range(16), 2)`` alone is ~4us; the
+# replica is ~1us — the difference is most of the per-child budget).
+# ---------------------------------------------------------------------- #
+def _randbelow(grb, n: int) -> int:
+    """CPython ``Random._randbelow_with_getrandbits`` consumption."""
+    k = n.bit_length()
+    r = grb(k)
+    while r >= n:
+        r = grb(k)
+    return r
+
+
+def _sample2(rng: random.Random, n: int) -> Tuple[int, int]:
+    """Exact stream replica of ``rng.sample(range(n), 2)``.
+
+    CPython's ``sample`` uses a pool for n <= setsize (21 when k=2) and
+    rejection against a seen-set above it; both branches are mirrored.
+    """
+    grb = rng.getrandbits
+    if n <= 21:
+        j1 = _randbelow(grb, n)
+        j2 = _randbelow(grb, n - 1)
+        return j1, (n - 1 if j2 == j1 else j2)
+    j1 = _randbelow(grb, n)
+    j2 = _randbelow(grb, n)
+    while j2 == j1:
+        j2 = _randbelow(grb, n)
+    return j1, j2
 
 
 # ---------------------------------------------------------------------- #
@@ -100,6 +137,12 @@ def _pow2_floor(x: int) -> int:
     return 1 << max(0, x.bit_length() - 1)
 
 
+@functools.lru_cache(maxsize=64)
+def _simd_opts(m: int) -> Tuple[int, ...]:
+    """SIMD width options ``<= m`` (the scalar sampler's ``opts`` list)."""
+    return tuple(d for d in (1, 2, 4, 8, 16) if d <= m)
+
+
 def _pow2_floor_arr(x: np.ndarray) -> np.ndarray:
     """Vectorized ``_pow2_floor`` for positive int64 arrays."""
     x = x.astype(np.uint64)
@@ -108,7 +151,8 @@ def _pow2_floor_arr(x: np.ndarray) -> np.ndarray:
     return ((x >> np.uint64(1)) + np.uint64(1)).astype(np.int64)
 
 
-def divisors(n: int) -> List[int]:
+@functools.lru_cache(maxsize=8192)
+def _divisors_t(n: int) -> Tuple[int, ...]:
     out = []
     d = 1
     while d * d <= n:
@@ -117,7 +161,38 @@ def divisors(n: int) -> List[int]:
             if d != n // d:
                 out.append(n // d)
         d += 1
-    return sorted(out)
+    return tuple(sorted(out))
+
+
+@functools.lru_cache(maxsize=8192)
+def _divisors_gt1(n: int) -> Tuple[int, ...]:
+    """Divisors > 1 (the factorization-mutation move set), cached."""
+    return _divisors_t(n)[1:]
+
+
+def divisors(n: int) -> List[int]:
+    return list(_divisors_t(n))
+
+
+@functools.lru_cache(maxsize=256)
+def _snap_tables(bound: int):
+    """Lookup tables for the vectorized divisor snap.
+
+    ``M[v]``  : largest divisor of ``bound`` that is <= v   (v in 0..bound)
+    ``DI[v]`` : index of divisor value v in the sorted divisor list
+    ``T[i,v]``: largest divisor of the i-th divisor of ``bound`` <= v
+    """
+    divs = _divisors_t(bound)
+    M = np.zeros(bound + 1, dtype=np.int64)
+    DI = np.zeros(bound + 1, dtype=np.int64)
+    for i, d in enumerate(divs):
+        M[d:] = d
+        DI[d] = i
+    T = np.zeros((len(divs), bound + 1), dtype=np.int64)
+    for i, d in enumerate(divs):
+        for dd in _divisors_t(d):
+            T[i, dd:] = dd
+    return M, DI, T
 
 
 @dataclasses.dataclass
@@ -148,6 +223,25 @@ class Genome:
 
     def as_dict(self) -> Dict[str, Triple]:
         return dict(self.triples)
+
+
+def genomes_to_matrix(genomes: Sequence[Genome],
+                      names: Sequence[str]) -> np.ndarray:
+    """Stack genomes into one ``[B, L, 3]`` int64 matrix (SoA layout)."""
+    return np.array([[g.triples[nm] for nm in names] for g in genomes],
+                    dtype=np.int64).reshape(len(genomes), len(names), 3)
+
+
+def matrix_to_genomes(mat: np.ndarray,
+                      names: Sequence[str]) -> List[Genome]:
+    """Materialize ``Genome`` objects from ``[B, L, 3]`` rows (boundary op)."""
+    names = list(names)
+    return [Genome(dict(zip(names, map(tuple, row))))
+            for row in mat.tolist()]
+
+
+def genome_from_row(row: np.ndarray, names: Sequence[str]) -> Genome:
+    return Genome(dict(zip(names, map(tuple, row.tolist()))))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,22 +316,15 @@ class GenomeSpace:
         n2 = max(d2) if d2 else 1
         return t1 // n2, n2
 
-    def legalize_batch(self, genomes: Sequence[Genome]) -> List[Genome]:
-        """Vectorized :meth:`legalize` over a whole population.
+    def legalize_matrix(self, arr: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`legalize` on a ``[B, L, 3]`` int64 matrix.
 
         Bit-equal to mapping the scalar path (same integer ops; the tile
-        count uses the same float64 division + ceil), which is what lets
-        ``evolve()`` defer per-child legalization to one NumPy call per
-        generation — the Amdahl bottleneck flagged in DESIGN.md §3.  The
-        divisor-snapped subspace keeps the scalar loop (its per-genome
-        divisor chains don't vectorize profitably at these sizes).
+        count uses the same float64 division + ceil).  The divisor snap of
+        ``divisors_only`` spaces is vectorized through cached lookup
+        tables (:func:`_snap_tables`), so the SoA engine never leaves
+        matrix land.
         """
-        if self.divisors_only or not genomes:
-            return [self.legalize(g) for g in genomes]
-        names = self.wl.loop_names
-        flat = [v for g in genomes for n in names for v in g.triples[n]]
-        arr = np.array(flat, dtype=np.int64).reshape(
-            len(genomes), len(names), 3)           # (B, L, 3)
         out = np.empty_like(arr)
         for li, l in enumerate(self.wl.loops):
             n1 = np.maximum(1, arr[:, li, 1])
@@ -258,21 +345,34 @@ class GenomeSpace:
                     shrunk = max(1, l.bound)
                 n2 = np.where(over, shrunk, n2)
                 n1 = np.where(over, 1, n1)
+            if self.divisors_only:
+                M, DI, T = _snap_tables(l.bound)
+                t1 = M[n1 * n2]          # largest divisor <= T1 (T1 <= bound)
+                n2 = T[DI[t1], np.minimum(n2, l.bound)]
+                n1 = t1 // n2
             out[:, li, 0] = np.maximum(
                 1, np.ceil(l.bound / (n1 * n2))).astype(np.int64)
             out[:, li, 1] = n1
             out[:, li, 2] = n2
+        return out
+
+    def legalize_batch(self, genomes: Sequence[Genome]) -> List[Genome]:
+        """Vectorized :meth:`legalize` over a whole population (object API:
+        stacks to a matrix, legalizes, materializes back)."""
+        if not genomes:
+            return []
+        names = self.wl.loop_names
+        out = self.legalize_matrix(genomes_to_matrix(genomes, names))
         # one bulk C-level conversion; per-element .item()/int() calls here
         # would cost more than the scalar path saves
-        return [Genome(dict(zip(names, map(tuple, r))))
-                for r in out.tolist()]
+        return matrix_to_genomes(out, names)
 
     # -- sampling ----------------------------------------------------------
     def sample(self, rng: random.Random) -> Genome:
         triples: Dict[str, Triple] = {}
         for l in self.wl.loops:
             if self.divisors_only:
-                t1 = rng.choice(divisors(l.bound))
+                t1 = rng.choice(_divisors_t(l.bound))
             else:
                 t1 = rng.randint(1, l.bound)
             if self.has_level2(l.name):
@@ -282,12 +382,55 @@ class GenomeSpace:
                     n2 = rng.choice(opts)
                     n1 = max(1, t1 // n2)
                 else:
-                    n2 = rng.choice(divisors(t1))
+                    n2 = rng.choice(_divisors_t(t1))
                     n1 = t1 // n2
             else:
                 n1, n2 = t1, 1
             triples[l.name] = (1, n1, n2)
         return self.legalize(Genome(triples))
+
+    def sample_matrix(self, rng: random.Random, n: int) -> np.ndarray:
+        """``n`` legalized genomes as a ``[n, L, 3]`` matrix.
+
+        Consumes exactly the RNG stream of ``n`` :meth:`sample` calls
+        (the per-genome draws are inherently scalar — the ``n2`` options
+        depend on the drawn ``t1``); legalization, which draws nothing,
+        is deferred to one :meth:`legalize_matrix` call.
+        """
+        L = len(self.wl.loops)
+        out = np.empty((n, L, 3), dtype=np.int64)
+        out[:, :, 0] = 1
+        grb = rng.getrandbits
+        div_only = self.divisors_only
+        simd_loop, simd_max = self.wl.simd_loop, self.wl.simd_max
+        cols = []
+        for l in self.wl.loops:
+            cols.append((l.bound, self.has_level2(l.name),
+                         l.name == simd_loop,
+                         _divisors_t(l.bound) if div_only else None))
+        for b in range(n):
+            row = out[b]
+            for li, (bound, lvl2, is_simd, bdivs) in enumerate(cols):
+                if div_only:
+                    t1 = bdivs[_randbelow(grb, len(bdivs))]
+                else:
+                    t1 = 1 + _randbelow(grb, bound)    # randint(1, bound)
+                if lvl2:
+                    if is_simd:
+                        opts = _simd_opts(t1 if t1 < simd_max else simd_max)
+                        n2 = opts[_randbelow(grb, len(opts))]
+                        n1 = t1 // n2
+                        if n1 < 1:
+                            n1 = 1
+                    else:
+                        divs = _divisors_t(t1)
+                        n2 = divs[_randbelow(grb, len(divs))]
+                        n1 = t1 // n2
+                else:
+                    n1, n2 = t1, 1
+                row[li, 1] = n1
+                row[li, 2] = n2
+        return self.legalize_matrix(out)
 
     # -- mutation (paper §4.1) ----------------------------------------------
     def mutate(self, g: Genome, rng: random.Random,
@@ -314,7 +457,7 @@ class GenomeSpace:
         loop = rng.choice(self.wl.loop_names)
         levels = list(out.triples[loop])
         a, b = rng.sample(range(3), 2)
-        divs = [d for d in divisors(levels[a]) if d > 1]
+        divs = _divisors_gt1(levels[a])
         if not divs:
             return out
         alpha = rng.choice(divs)
@@ -355,6 +498,151 @@ class GenomeSpace:
             triples[l] = (a if rng.random() < 0.5 else b).triples[l]
         out = Genome(triples)
         return self.legalize(out) if legalize else out
+
+    # -- SoA fast-path operators (matrix populations) ------------------------
+    def soa_children(self, pmat: np.ndarray, parent_rows: Sequence[int],
+                     n_children: int, rng: random.Random,
+                     crossover_rate: float, alpha: float) -> np.ndarray:
+        """One generation of raw offspring as a ``[n_children, L, 3]`` matrix.
+
+        Consumes exactly the RNG stream of the object engine's per-child
+        ``crossover``/``mutate`` loop (selection coin, parent picks,
+        per-loop coins, mutation draws — via the ``getrandbits`` replicas
+        above), but the only per-child Python work is those draws: the
+        children themselves are built with one fancy-indexed gather plus
+        two scattered mutation writes.  Children are *raw* — the caller
+        legalizes the generation with one :meth:`legalize_matrix` call,
+        mirroring the object path's ``finalize_batch``.
+        """
+        L = len(self.wl.loops)
+        npar = len(parent_rows)
+        rr = rng.random
+        grb = rng.getrandbits
+        div_only = self.divisors_only
+        parr = np.asarray(parent_rows, dtype=np.intp)
+        plist = pmat[parr].tolist()      # parent triples as nested ints
+        src: List[int] = []              # parent position per (child, loop)
+        m_c: List[int] = []
+        m_li: List[int] = []
+        m_a: List[int] = []
+        m_va: List[int] = []
+        m_b: List[int] = []
+        m_vb: List[int] = []
+        ceil = math.ceil
+        # _randbelow/_sample2 are inlined below: at ~6 draws per child the
+        # call overhead alone would dominate the per-generation budget.
+        kpar = npar.bit_length()
+        kpar1 = (npar - 1).bit_length()
+        kL = L.bit_length()
+        pool_path = npar <= 21            # CPython sample() branch for k=2
+        for c in range(n_children):
+            if rr() < crossover_rate and npar >= 2:
+                # rng.sample(range(npar), 2)
+                if pool_path:
+                    j1 = grb(kpar)
+                    while j1 >= npar:
+                        j1 = grb(kpar)
+                    j2 = grb(kpar1)
+                    while j2 >= npar - 1:
+                        j2 = grb(kpar1)
+                    if j2 == j1:
+                        j2 = npar - 1
+                else:
+                    j1 = grb(kpar)
+                    while j1 >= npar:
+                        j1 = grb(kpar)
+                    j2 = grb(kpar)
+                    while j2 >= npar or j2 == j1:
+                        j2 = grb(kpar)
+                srow = [j1 if rr() < 0.5 else j2 for _ in range(L)]
+                src += srow
+            else:
+                # parents[rng.randrange(npar)]
+                j1 = grb(kpar)
+                while j1 >= npar:
+                    j1 = grb(kpar)
+                srow = None
+                src += [j1] * L
+            # hybrid mutation (same draws as GenomeSpace.mutate)
+            fact = rr() < alpha or div_only
+            li = grb(kL)                  # rng.choice(loop_names)
+            while li >= L:
+                li = grb(kL)
+            # rng.sample(range(3), 2): _randbelow(3) then _randbelow(2)
+            # (both consume getrandbits(2) — bit_length of 3 and of 2)
+            a = grb(2)
+            while a >= 3:
+                a = grb(2)
+            b = grb(2)
+            while b >= 2:
+                b = grb(2)
+            if b == a:
+                b = 2
+            lv = plist[j1 if srow is None else srow[li]][li]
+            va = lv[a]
+            if fact:
+                divs = _divisors_gt1(va)
+                if not divs:
+                    continue
+                nd = len(divs)
+                kd = nd.bit_length()
+                f = grb(kd)               # rng.choice(divs)
+                while f >= nd:
+                    f = grb(kd)
+                f = divs[f]
+                new_a = va // f
+                new_b = lv[b] * f
+            else:
+                # rng.randint(1, max(1, va))
+                n = va if va > 1 else 1
+                kn = n.bit_length()
+                s = grb(kn)
+                while s >= n:
+                    s = grb(kn)
+                s += 1
+                new_b = ceil(va * lv[b] / s)   # float ceil, like the scalar op
+                new_a = s
+            m_c.append(c)
+            m_li.append(li)
+            m_a.append(a)
+            m_va.append(new_a)
+            m_b.append(b)
+            m_vb.append(new_b)
+        srcpos = np.asarray(src, dtype=np.intp).reshape(n_children, L)
+        children = pmat[parr[srcpos], np.arange(L, dtype=np.intp)[None, :]]
+        if m_c:
+            rows, lis = np.asarray(m_c), np.asarray(m_li)
+            children[rows, lis, np.asarray(m_a)] = m_va
+            children[rows, lis, np.asarray(m_b)] = m_vb
+        return children
+
+    def soa_mutate_rows(self, mat: np.ndarray, rng: random.Random,
+                        alpha: float) -> np.ndarray:
+        """Raw hybrid mutation of every row (one draw sequence per row,
+        identical to per-row :meth:`mutate`); caller legalizes."""
+        L = len(self.wl.loops)
+        out = mat.copy()
+        rows = mat.tolist()
+        rr = rng.random
+        grb = rng.getrandbits
+        for r, row in enumerate(rows):
+            fact = rr() < alpha or self.divisors_only
+            li = _randbelow(grb, L)
+            a, b = _sample2(rng, 3)
+            lv = row[li]
+            va = lv[a]
+            if fact:
+                divs = _divisors_gt1(va)
+                if not divs:
+                    continue
+                f = divs[_randbelow(grb, len(divs))]
+                out[r, li, a] = va // f
+                out[r, li, b] = lv[b] * f
+            else:
+                s = 1 + _randbelow(grb, va if va > 1 else 1)
+                out[r, li, b] = math.ceil(va * lv[b] / s)
+                out[r, li, a] = s
+        return out
 
     # -- exhaustive enumeration (divisor sub-space, for reference search) -----
     def enumerate_divisor_genomes(self, max_count: Optional[int] = None

@@ -24,6 +24,13 @@ designs strictly serially with no cross-design sharing.  The
 ``tuner.tune_workload`` is a thin wrapper over this class, so every existing
 call site keeps working; the engine is the opt-in fast path.
 
+The process executor auto-picks the *fork* start method only when the
+process looks single-threaded (no Python threads, no jax); numpy's BLAS
+pool is tolerated because it re-initializes across fork.  Embedders whose
+processes carry other native threads (torch/OpenMP, grpc, ...) should pass
+``SessionConfig(start_method="spawn")`` — fork with foreign native threads
+can deadlock the child.
+
 Sessions can be backed by a persistent **design registry**
 (``repro.registry``): an exact fingerprint hit returns the cached winner
 with zero evolutionary evaluations, a near miss warm-starts every design
@@ -35,13 +42,15 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import math
 import multiprocessing
 import os
+import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .design_space import Permutation, enumerate_designs
+from .design_space import Genome, Permutation, enumerate_designs
 from .descriptor import DesignDescriptor, build_descriptor
-from .evolutionary import EvoConfig
+from .evolutionary import EvoConfig, EvoResult, TraceEntry
 from .hardware import HardwareProfile, U250
 from .perf_model import BatchPerformanceModel, PerformanceModel
 from .workloads import Workload
@@ -58,6 +67,26 @@ class SessionConfig:
     early_abort: bool = True
     abort_factor: float = 3.0        # give up if probe best > factor*incumbent
     probe_epochs: int = 8            # epochs before the abort test applies
+    # with early_abort: run a short probe search *before* the MP seeding
+    # once an incumbent exists, so a dominated design is cut before its
+    # most expensive stage instead of after it (survivors rerun from
+    # scratch — their results are unchanged).  triage_factor (default:
+    # abort_factor) may be tighter than the mid-flight factor — a
+    # finished fixed-epoch probe is a more stable signal than a live
+    # search's epoch-by-epoch best.
+    triage: bool = True
+    triage_factor: Optional[float] = None
+    # multiprocessing start method for the process executor: None picks
+    # "fork" when it is available and jax has not been imported (forking a
+    # threaded process can deadlock), else "spawn".  Fork makes the pool
+    # startup cheap enough that a 2-core sweep still beats serial.
+    start_method: Optional[str] = None
+    # pool submission order: "wide_first" launches designs with more space
+    # loops first — 2-D arrays dominate the frontier, so a strong
+    # incumbent lands while the 1-D tail is still in its probe phase and
+    # the shared-incumbent abort can actually cut it; "index" keeps
+    # enumeration order.  Results are always reported in design order.
+    schedule: str = "wide_first"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,15 +121,94 @@ def pareto_frontier(results: Sequence) -> List:
             if not any(dominates(s, r) for s in pool if s is not r)]
 
 
-def _tune_payload(payload):
-    """Module-level worker so ProcessPoolExecutor can pickle the task."""
-    (wl, df, perm, hw, cfg, use_mp_seed, divisors_only,
-     incumbent, factor, probe, extra_seeds) = payload
+# ---------------------------------------------------------------------- #
+# Persistent process-pool workers.  The session ships the workload + design
+# list once (pool initializer); per-task payloads are just a design index,
+# a config and seed triples, and results travel back as plain matrices and
+# floats — no Genome/descriptor/model objects cross the process boundary.
+# Workers keep the built descriptor/models in ``_WORKER`` across tasks and
+# publish finished feasible latencies into a shared incumbent value that
+# every in-flight search polls from its ``stop_fn`` (mid-flight abort).
+# ---------------------------------------------------------------------- #
+_WORKER: Dict = {}
+
+
+def _pool_init(wl, hw, designs, use_mp_seed, divisors_only, incumbent,
+               abort_factor, probe_epochs, triage, triage_factor):
+    _WORKER.update(wl=wl, hw=hw, designs=designs, use_mp_seed=use_mp_seed,
+                   divisors_only=divisors_only, incumbent=incumbent,
+                   abort_factor=abort_factor, probe_epochs=probe_epochs,
+                   triage=triage, triage_factor=triage_factor, built={})
+
+
+def _worker_built(i):
+    built = _WORKER["built"]
+    if i not in built:
+        df, perm = _WORKER["designs"][i]
+        desc = build_descriptor(_WORKER["wl"], df, perm)
+        model = PerformanceModel(desc, _WORKER["hw"])
+        built[i] = (desc, model, BatchPerformanceModel(desc, _WORKER["hw"]))
+    return built[i]
+
+
+def _read_incumbent():
+    val = _WORKER["incumbent"]
+    if val is None:
+        return None
+    v = val.value
+    return None if math.isinf(v) else v
+
+
+def _publish_incumbent(latency: float) -> None:
+    val = _WORKER["incumbent"]
+    if val is None:
+        return
+    with val.get_lock():
+        if latency < val.value:
+            val.value = latency
+
+
+def result_payload(res) -> Dict:
+    """A ``DesignResult`` as plain matrices/floats (what crosses the
+    process boundary; ``SearchSession`` re-materializes from its own
+    cached descriptor/model)."""
+    return {
+        "genome": {l: tuple(t) for l, t in res.evo.best.as_dict().items()},
+        "best_fitness": res.evo.best_fitness,
+        "evals": res.evo.evals,
+        "evo_seconds": res.evo.seconds,
+        "trace": [(t.evals, t.seconds, t.best_fitness, t.evals_per_sec)
+                  for t in res.evo.trace],
+        "aborted": res.evo.aborted,
+        "latency_cycles": res.latency_cycles,
+        "throughput": res.throughput,
+        "dsp": res.dsp,
+        "bram": res.bram,
+        "feasible": res.feasible,
+        "seconds": res.seconds,
+    }
+
+
+def _pool_tune(i: int, cfg: EvoConfig, early_abort: bool,
+               seed_triples: Tuple) -> Dict:
     from .tuner import tune_design
-    return tune_design(wl, df, perm, hw=hw, cfg=cfg, use_mp_seed=use_mp_seed,
-                       divisors_only=divisors_only, abort_latency=incumbent,
-                       abort_factor=factor, probe_epochs=probe,
-                       extra_seeds=extra_seeds)
+    desc, model, batch_model = _worker_built(i)
+    df, perm = _WORKER["designs"][i]
+    seeds = tuple(Genome(dict(t)) for t in seed_triples)
+    res = tune_design(
+        _WORKER["wl"], df, perm, hw=_WORKER["hw"], cfg=cfg,
+        use_mp_seed=_WORKER["use_mp_seed"],
+        divisors_only=_WORKER["divisors_only"],
+        desc=desc, model=model, batch_model=batch_model,
+        incumbent_fn=_read_incumbent if early_abort else None,
+        abort_factor=_WORKER["abort_factor"],
+        probe_epochs=_WORKER["probe_epochs"],
+        triage=early_abort and _WORKER["triage"],
+        triage_factor=_WORKER["triage_factor"],
+        extra_seeds=seeds)
+    if res.feasible and not res.aborted:
+        _publish_incumbent(res.latency_cycles)
+    return result_payload(res)
 
 
 class SearchSession:
@@ -131,11 +239,16 @@ class SearchSession:
         self.wl = wl
         self.hw = hw
         self.designs: List[Design] = list(designs or enumerate_designs(wl))
-        cfg = cfg or EvoConfig()
-        if time_budget_s is not None:
-            per = time_budget_s / max(1, len(self.designs))
-            cfg = EvoConfig(**{**cfg.__dict__, "time_budget_s": per})
-        self.cfg = cfg
+        self.cfg = cfg or EvoConfig()
+        # Wall-clock budget for the whole sweep.  Instead of a fixed
+        # ``budget / n_designs`` slice per design, slices are computed at
+        # dispatch time from what is actually left: a design that aborts
+        # or converges early refunds its unused seconds, and later designs
+        # inherit them — the budget is spent searching, not idling.
+        self.time_budget_s = time_budget_s
+        self._budget_left = time_budget_s
+        self._unassigned = len(self.designs)
+        self.budget_log: List[float] = []   # dispatched slice per design
         self.use_mp_seed = use_mp_seed
         self.divisors_only = divisors_only
         self.session = session or SessionConfig()
@@ -214,28 +327,109 @@ class SearchSession:
                     res.latency_cycles < self._incumbent:
                 self._incumbent = res.latency_cycles
 
+    # -- time-budget ledger -------------------------------------------------
+    def _dispatch_cfg(self) -> Tuple[EvoConfig, Optional[float]]:
+        """Per-design config at dispatch: an equal share of whatever
+        budget is still unspent by the designs dispatched so far."""
+        if self.time_budget_s is None:
+            return self.cfg, None
+        slice_s = max(0.0, self._budget_left) / max(1, self._unassigned)
+        self._unassigned -= 1
+        self._budget_left -= slice_s
+        self.budget_log.append(slice_s)
+        return dataclasses.replace(self.cfg, time_budget_s=slice_s), slice_s
+
+    def _refund(self, slice_s: Optional[float], used_s: float) -> None:
+        """Roll a design's unused seconds back into the pool.
+
+        ``used_s`` is the design's *full* wall-clock (MP seeding and the
+        triage probe included, like ``NetworkSession``'s per-class
+        charge), not just the evolve share — otherwise un-budgeted
+        seeding time would be refunded as if unspent and the sweep would
+        overshoot ``time_budget_s``.  Overruns are debited (the refund
+        may be negative): later designs absorb them, the same rule
+        ``NetworkSession.tune_classes`` applies across classes.
+        """
+        if slice_s is not None:
+            self._budget_left += slice_s - used_s
+
     # -- execution ---------------------------------------------------------
-    def _tune_index(self, i: int, incumbent: Optional[float]):
+    def _tune_index(self, i: int, cfg: EvoConfig):
         from .tuner import tune_design
         df, perm = self.designs[i]
         desc, model, batch_model = self.built(self.designs[i])
-        return tune_design(self.wl, df, perm, hw=self.hw, cfg=self.cfg,
+        incumbent_fn = (lambda: self._incumbent) \
+            if self.session.early_abort else None
+        return tune_design(self.wl, df, perm, hw=self.hw, cfg=cfg,
                            use_mp_seed=self.use_mp_seed,
                            divisors_only=self.divisors_only,
                            desc=desc, model=model, batch_model=batch_model,
-                           abort_latency=incumbent
-                           if self.session.early_abort else None,
+                           incumbent_fn=incumbent_fn,
                            abort_factor=self.session.abort_factor,
                            probe_epochs=self.session.probe_epochs,
+                           triage=self.session.early_abort and
+                           self.session.triage,
+                           triage_factor=self.session.triage_factor,
                            extra_seeds=self._design_seeds(self.designs[i]))
 
     def _run_serial(self) -> List:
         out = []
         for i in range(len(self.designs)):
-            res = self._tune_index(i, self._incumbent)
+            cfg, slice_s = self._dispatch_cfg()
+            res = self._tune_index(i, cfg)
+            self._refund(slice_s, res.seconds)
             self._observe(res)
             out.append(res)
         return out
+
+    # -- process-pool plumbing ---------------------------------------------
+    @staticmethod
+    def _fork_safe() -> bool:
+        """Heuristic for auto-picking the fork start method.
+
+        Forking a process with live threads that hold locks can deadlock
+        the child.  The threads we can be cut by are Python-level worker
+        threads (data pipeline, async checkpointing — visible to
+        ``threading``) and jax's runtime threads (spawned lazily and
+        invisible, so jax's presence alone disqualifies fork).  NumPy's
+        OpenBLAS pool also shows up as native threads, but it registers
+        ``pthread_atfork`` handlers that quiesce and reinitialize the
+        pool across fork, so it does not disqualify.  Callers with other
+        exotic native threads should set ``start_method="spawn"``.
+        """
+        import threading
+        return threading.active_count() == 1 and "jax" not in sys.modules
+
+    def _mp_context(self):
+        method = self.session.start_method
+        if method is None:
+            # fork is near-free (no re-import, warm caches); spawn is the
+            # safe fallback once threads exist
+            if "fork" in multiprocessing.get_all_start_methods() and \
+                    self._fork_safe():
+                method = "fork"
+            else:
+                method = "spawn"
+        return multiprocessing.get_context(method)
+
+    def _result_from_payload(self, i: int, p: Dict):
+        """Re-materialize a ``DesignResult`` from a worker's payload using
+        the parent's cached descriptor/model (nothing heavy was pickled)."""
+        from .design_space import DesignPoint
+        from .tuner import DesignResult
+        df, perm = self.designs[i]
+        desc, model, _ = self.built(self.designs[i])
+        g = Genome(dict(p["genome"]))
+        evo = EvoResult(best=g, best_fitness=p["best_fitness"],
+                        evals=p["evals"], seconds=p["evo_seconds"],
+                        trace=[TraceEntry(*t) for t in p["trace"]],
+                        aborted=p["aborted"])
+        return DesignResult(
+            design=DesignPoint(df, perm, g), descriptor=desc, model=model,
+            evo=evo, latency_cycles=p["latency_cycles"],
+            throughput=p["throughput"], dsp=p["dsp"], bram=p["bram"],
+            feasible=p["feasible"], seconds=p["seconds"],
+            aborted=p["aborted"])
 
     def _run_pool(self) -> List:
         n_designs = len(self.designs)
@@ -244,46 +438,64 @@ class SearchSession:
         results: List = [None] * n_designs
         use_procs = self.session.executor == "process"
         if use_procs:
-            # spawn, not fork: callers routinely have jax (multithreaded)
-            # loaded, and forking a threaded process can deadlock.  Workers
-            # are reused across designs, so the spawn cost is per-pool.
-            ctx = multiprocessing.get_context("spawn")
+            ctx = self._mp_context()
+            shared = ctx.Value("d", math.inf) \
+                if self.session.early_abort else None
+
             def Executor(max_workers):
-                return cf.ProcessPoolExecutor(max_workers=max_workers,
-                                              mp_context=ctx)
+                return cf.ProcessPoolExecutor(
+                    max_workers=max_workers, mp_context=ctx,
+                    initializer=_pool_init,
+                    initargs=(self.wl, self.hw, self.designs,
+                              self.use_mp_seed, self.divisors_only, shared,
+                              self.session.abort_factor,
+                              self.session.probe_epochs,
+                              self.session.triage,
+                              self.session.triage_factor))
         else:
             Executor = cf.ThreadPoolExecutor
 
-        def submit(ex, i):
-            if use_procs:
-                df, perm = self.designs[i]
-                payload = (self.wl, df, perm, self.hw, self.cfg,
-                           self.use_mp_seed, self.divisors_only,
-                           self._incumbent if self.session.early_abort
-                           else None,
-                           self.session.abort_factor,
-                           self.session.probe_epochs,
-                           self._design_seeds(self.designs[i]))
-                return ex.submit(_tune_payload, payload)
-            return ex.submit(self._tune_index, i, self._incumbent)
-
         with Executor(max_workers=workers) as ex:
-            # lazy submission: later designs see the incumbent found so far
-            next_i = 0
+            # submission is still lazy so budget refunds (and, for the
+            # thread pool, the in-process incumbent) flow to later designs;
+            # process workers additionally poll the shared incumbent value
+            # every epoch, so even designs submitted early abort mid-flight
             pending: Dict = {}
+
+            def submit(i):
+                cfg, slice_s = self._dispatch_cfg()
+                if use_procs:
+                    seed_triples = tuple(
+                        tuple(g.as_dict().items())
+                        for g in self._design_seeds(self.designs[i]))
+                    fut = ex.submit(_pool_tune, i, cfg,
+                                    self.session.early_abort, seed_triples)
+                else:
+                    fut = ex.submit(self._tune_index, i, cfg)
+                pending[fut] = (i, slice_s)
+
+            if self.session.schedule == "wide_first":
+                order = sorted(range(n_designs),
+                               key=lambda i: -len(self.designs[i][0]))
+            else:
+                order = list(range(n_designs))
+            next_i = 0
             while next_i < min(workers, n_designs):
-                pending[submit(ex, next_i)] = next_i
+                submit(order[next_i])
                 next_i += 1
             while pending:
                 done, _ = cf.wait(list(pending),
                                   return_when=cf.FIRST_COMPLETED)
                 for fut in done:
-                    i = pending.pop(fut)
+                    i, slice_s = pending.pop(fut)
                     res = fut.result()
+                    if use_procs:
+                        res = self._result_from_payload(i, res)
+                    self._refund(slice_s, res.seconds)
                     self._observe(res)
                     results[i] = res
                     if next_i < n_designs:
-                        pending[submit(ex, next_i)] = next_i
+                        submit(order[next_i])
                         next_i += 1
         return results
 
@@ -296,6 +508,10 @@ class SearchSession:
         is recorded for future sessions.
         """
         from .tuner import TuneReport
+        # fresh budget ledger per run (a session may be re-run)
+        self._budget_left = self.time_budget_s
+        self._unassigned = len(self.designs)
+        self.budget_log = []
         if self.registry is not None:
             if not self.refresh:
                 cached = self._cached_report()

@@ -25,7 +25,20 @@ import time
 from typing import (Callable, Generic, List, Optional, Sequence, Tuple,
                     TypeVar)
 
+import numpy as np
+
 G = TypeVar("G")
+
+
+@dataclasses.dataclass(frozen=True)
+class SoaHandle:
+    """Capability bundle a problem returns from ``soa_ops()`` to opt into
+    the structure-of-arrays engine: the genome space (matrix sampling /
+    child generation / legalization) and the matrix-native evaluator."""
+
+    space: object                    # GenomeSpace-compatible SoA operators
+    batch_model: object              # has fitness_matrix([B, L, 3])
+    use_max_model: bool = False
 
 
 @dataclasses.dataclass
@@ -95,10 +108,19 @@ class Problem(Generic[G]):
     # the legalizing operator would have produced (and is idempotent on
     # already-final genomes, since elites pass through it too).  The
     # engine then repairs a whole generation in one call instead of
-    # per-child Python — the DESIGN.md §3 Amdahl fix.
+    # per-child Python (the object-batched engine's repair path; the SoA
+    # engine legalizes the generation matrix directly, DESIGN.md §3).
     mutate_raw = None
     crossover_raw = None
     finalize_batch = None
+
+    def soa_ops(self) -> Optional[SoaHandle]:
+        """Return a :class:`SoaHandle` to run the structure-of-arrays
+        engine (populations as ``[B, L, 3]`` int64 matrices end-to-end,
+        Genome objects only at the boundaries); ``None`` keeps the
+        object path.  The SoA engine consumes the identical RNG stream,
+        so both paths return the same result at a fixed seed."""
+        return None
 
 
 def evolve(problem: Problem[G], cfg: EvoConfig,
@@ -110,7 +132,14 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
     ``stop_fn(epoch, best_fitness, best_genome)`` is polled once per epoch;
     returning True aborts the search (used by the sweep orchestrator to cut
     off designs dominated by the incumbent across-design best).
+
+    Problems whose ``soa_ops()`` returns a :class:`SoaHandle` run through
+    the structure-of-arrays engine (:func:`_evolve_soa`); the object path
+    below is the bit-equality oracle for it.
     """
+    handle = problem.soa_ops() if hasattr(problem, "soa_ops") else None
+    if handle is not None:
+        return _evolve_soa(handle, cfg, seeds, stop_fn)
     rng = random.Random(cfg.seed)
     t0 = time.perf_counter()
     evals = 0
@@ -195,6 +224,114 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
 
 
 # ---------------------------------------------------------------------- #
+# Structure-of-arrays engine
+# ---------------------------------------------------------------------- #
+def _evolve_soa(handle: SoaHandle, cfg: EvoConfig, seeds: Sequence,
+                stop_fn) -> EvoResult:
+    """Array-native ``evolve``: the population lives as one ``[B, L, 3]``
+    int64 matrix from sampling to selection.
+
+    Per generation the only Python-level work is the scalar RNG draws
+    (inherently sequential and data-dependent — kept stream-identical to
+    the object path); everything else is a handful of NumPy calls:
+    offspring via one gather + two scattered writes
+    (``GenomeSpace.soa_children``), repair via ``legalize_matrix``,
+    dedup via per-row byte keys against a cross-generation dict (no
+    ``key()`` tuples), evaluation via
+    ``BatchPerformanceModel.fitness_matrix`` (no ``stack()``), selection
+    via one stable ``argsort``.  ``Genome`` objects are materialized only
+    at the boundaries: seeds in, best/``stop_fn`` probes out.
+    """
+    from .design_space import genome_from_row, genomes_to_matrix
+
+    space, batch_model = handle.space, handle.batch_model
+    use_max = handle.use_max_model
+    names = space.wl.loop_names
+    L = len(names)
+    rng = random.Random(cfg.seed)
+    t0 = time.perf_counter()
+    evals = 0
+    cache: dict = {}
+
+    def score(mat: np.ndarray):
+        """(fitness [B], stable descending order [B]); evaluates rows not
+        already in the byte-key dedup cache."""
+        nonlocal evals
+        blob = mat.tobytes()            # one C-level copy, sliced per row
+        rowbytes = mat.shape[1] * mat.shape[2] * mat.itemsize
+        keys = [blob[o:o + rowbytes]
+                for o in range(0, len(blob), rowbytes)]
+        fresh: List[int] = []
+        seen = set()
+        for i, k in enumerate(keys):
+            if k not in cache and k not in seen:
+                seen.add(k)
+                fresh.append(i)
+        if fresh:
+            sub = mat if len(fresh) == len(keys) else mat[np.asarray(fresh)]
+            vals = batch_model.fitness_matrix(sub, use_max_model=use_max)
+            evals += len(fresh)
+            for i, v in zip(fresh, vals):
+                cache[keys[i]] = float(v)
+        fit = np.fromiter((cache[k] for k in keys), dtype=np.float64,
+                          count=len(keys))
+        return fit, np.argsort(-fit, kind="stable")
+
+    def record():
+        dt = time.perf_counter() - t0
+        trace.append(TraceEntry(evals, dt, best_f, evals / max(1e-12, dt)))
+
+    seed_rows = list(seeds)[:cfg.population]
+    n_sample = cfg.population - len(seed_rows)
+    blocks = []
+    if seed_rows:
+        blocks.append(genomes_to_matrix(seed_rows, names))
+    if n_sample:
+        blocks.append(space.sample_matrix(rng, n_sample))
+    pop = blocks[0] if len(blocks) == 1 else np.concatenate(blocks)
+
+    fit, order = score(pop)
+    best_f = float(fit[order[0]])
+    best_row = pop[order[0]].copy()
+    trace: List[TraceEntry] = []
+    record()
+
+    def out_of_budget() -> bool:
+        if cfg.time_budget_s is not None and \
+                time.perf_counter() - t0 >= cfg.time_budget_s:
+            return True
+        if cfg.max_evals is not None and evals >= cfg.max_evals:
+            return True
+        return False
+
+    aborted = False
+    for epoch in range(cfg.epochs):
+        if out_of_budget():
+            break
+        if stop_fn is not None and \
+                stop_fn(epoch, best_f, genome_from_row(best_row, names)):
+            aborted = True
+            break
+        parent_rows = order[:cfg.parents].tolist()
+        raw = space.soa_children(pop, parent_rows,
+                                 cfg.population - cfg.elites, rng,
+                                 cfg.crossover_rate, cfg.mutation_alpha)
+        if cfg.elites:
+            raw = np.concatenate([pop[order[:cfg.elites]], raw])
+        pop = space.legalize_matrix(raw)
+        fit, order = score(pop)
+        if fit[order[0]] > best_f:
+            best_f = float(fit[order[0]])
+            best_row = pop[order[0]].copy()
+        record()
+
+    return EvoResult(best=genome_from_row(best_row, names),
+                     best_fitness=best_f, evals=evals,
+                     seconds=time.perf_counter() - t0, trace=trace,
+                     aborted=aborted)
+
+
+# ---------------------------------------------------------------------- #
 # Adapter binding a GenomeSpace + PerformanceModel to the Problem interface
 # ---------------------------------------------------------------------- #
 class TilingProblem(Problem):
@@ -208,15 +345,29 @@ class TilingProblem(Problem):
 
     def __init__(self, space, model, use_max_model: bool = False,
                  fitness_fn: Optional[Callable] = None, batch: bool = True,
-                 batch_model=None):
+                 batch_model=None, soa: bool = True):
         self.space = space
         self.model = model
         self.use_max_model = use_max_model
         self.fitness_fn = fitness_fn
         self.batch_model = batch_model
+        self.soa = soa
         if batch_model is None and batch and fitness_fn is None:
             from .perf_model import BatchPerformanceModel
             self.batch_model = BatchPerformanceModel(model.desc, model.hw)
+
+    def soa_ops(self) -> Optional[SoaHandle]:
+        """SoA engine opt-in: only for the stock problem (subclasses that
+        override fitness hooks keep the object path unless they opt in
+        themselves), with a batch model and no custom fitness."""
+        if not self.soa or type(self) is not TilingProblem:
+            return None
+        if self.fitness_fn is not None or self.batch_model is None:
+            return None
+        if not hasattr(self.batch_model, "fitness_matrix"):
+            return None
+        return SoaHandle(space=self.space, batch_model=self.batch_model,
+                         use_max_model=self.use_max_model)
 
     def sample(self, rng):
         return self.space.sample(rng)

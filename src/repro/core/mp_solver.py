@@ -19,12 +19,15 @@ search (~1.5x off the hybrid optimum) and serve as evolutionary seeds.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import random
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from .descriptor import DesignDescriptor
-from .design_space import Genome, GenomeSpace
+from .design_space import Genome, GenomeSpace, genome_from_row
 from .hardware import HardwareProfile
 from .perf_model import PerformanceModel
 
@@ -56,11 +59,14 @@ def _norm_constants(model: PerformanceModel) -> Tuple[float, float]:
     return dm_scale, dsp_scale
 
 
-def _objective(model: PerformanceModel, g: Genome, which: str) -> float:
-    dm_scale, dsp_scale = _norm_constants(model)
-    r = model.resources(g)
-    dm = model.off_chip_bytes(g) / dm_scale
-    comp = r.dsp / dsp_scale
+def _objective_terms(model: PerformanceModel, scales: Tuple[float, float],
+                     dsp: int, bram: int, lut: int, off_chip: int,
+                     which: str) -> float:
+    """The objective from raw metric values (shared by the scalar path
+    and the batched line-search, so both produce identical floats)."""
+    dm_scale, dsp_scale = scales
+    dm = off_chip / dm_scale
+    comp = dsp / dsp_scale
     if which == "obj1_comp":
         val = -comp
     elif which == "obj2_comm":
@@ -70,16 +76,25 @@ def _objective(model: PerformanceModel, g: Genome, which: str) -> float:
     else:
         raise ValueError(which)
     # exterior penalty keeps the relaxation inside Eq. (3)
-    if r.dsp > model.hw.dsp_available:
-        val += 50.0 * (r.dsp / model.hw.dsp_available - 1.0)
-    if r.bram > model.hw.bram_available:
-        val += 50.0 * (r.bram / model.hw.bram_available - 1.0)
-    if model.hw.lut_available and r.lut > model.hw.lut_available:
-        val += 50.0 * (r.lut / model.hw.lut_available - 1.0)
+    if dsp > model.hw.dsp_available:
+        val += 50.0 * (dsp / model.hw.dsp_available - 1.0)
+    if bram > model.hw.bram_available:
+        val += 50.0 * (bram / model.hw.bram_available - 1.0)
+    if model.hw.lut_available and lut > model.hw.lut_available:
+        val += 50.0 * (lut / model.hw.lut_available - 1.0)
     return val
 
 
-def _candidate_values(bound: int) -> List[int]:
+def _objective(model: PerformanceModel, g: Genome, which: str,
+               scales: Optional[Tuple[float, float]] = None) -> float:
+    r = model.resources(g)
+    return _objective_terms(model, scales or _norm_constants(model),
+                            r.dsp, r.bram, r.lut,
+                            model.off_chip_bytes(g), which)
+
+
+@functools.lru_cache(maxsize=1024)
+def _candidate_values(bound: int) -> Tuple[int, ...]:
     """Geometric grid over [1, bound] — the coordinate line-search domain."""
     vals = set()
     v = 1.0
@@ -87,23 +102,102 @@ def _candidate_values(bound: int) -> List[int]:
         vals.add(int(round(v)))
         v *= 1.3
     vals.add(bound)
-    return sorted(x for x in vals if 1 <= x <= bound)
+    return tuple(sorted(x for x in vals if 1 <= x <= bound))
 
 
 def solve(space: GenomeSpace, model: PerformanceModel,
           objective: str = "obj3_comm_comp", starts: int = 8,
-          sweeps: int = 6, seed: int = 0) -> MPResult:
-    """Multi-start projected coordinate descent on the MP relaxation."""
+          sweeps: int = 6, seed: int = 0, batch_model=None) -> MPResult:
+    """Multi-start projected coordinate descent on the MP relaxation.
+
+    With a ``batch_model`` (:class:`~.perf_model.BatchPerformanceModel`)
+    each coordinate's whole line search is evaluated in one matrix call
+    and the scalar accept rule is replayed over the returned values —
+    identical trajectory and result to the scalar loop (pinned by
+    ``tests/test_search.py``), an order of magnitude faster.  The scalar
+    path remains the oracle.
+    """
     wl = space.wl
     rng = random.Random(seed)
+    scales = _norm_constants(model)
+    names = list(wl.loop_names)
+    li_of = {n: i for i, n in enumerate(names)}
     best: Tuple[float, Genome] = (math.inf, space.sample(rng))
+
+    def batch_objs(legal: np.ndarray) -> List[float]:
+        dsp, bram, lut, off = batch_model.resource_traffic_matrix(legal)
+        return [_objective_terms(model, scales, d, b, l, o, objective)
+                for d, b, l, o in zip(dsp.tolist(), bram.tolist(),
+                                      lut.tolist(), off.tolist())]
+
+    def row_of(g: Genome) -> np.ndarray:
+        return np.array([g.triples[n] for n in names], dtype=np.int64)
+
+    def scan_coord1(g, cur, loop):
+        """Line search over T1; candidate construction depends on the
+        current genome's n2 for ``loop``, so an accept that changes n2
+        re-batches the remaining grid (rare after the first sweep)."""
+        li = li_of[loop]
+        vals = _candidate_values(wl.loop(loop).bound)
+        improved = False
+        idx = 0
+        while idx < len(vals):
+            n2_cur = g.triples[loop][2]
+            base = row_of(g)
+            rem = vals[idx:]
+            mat = np.repeat(base[None], len(rem), axis=0)
+            for j, t1 in enumerate(rem):
+                n2 = n2_cur if n2_cur < t1 else t1
+                n1 = t1 // n2 if n2 else t1
+                mat[j, li] = (1, n1 if n1 > 1 else 1, n2)
+            legal = space.legalize_matrix(mat)
+            objs = batch_objs(legal)
+            rebatch = False
+            for j, v in enumerate(objs):
+                if v < cur - 1e-12:
+                    cur = v
+                    g = genome_from_row(legal[j], names)
+                    improved = True
+                    if g.triples[loop][2] != n2_cur:
+                        idx += j + 1
+                        rebatch = True
+                        break
+            if not rebatch:
+                break
+        return g, cur, improved
+
+    def scan_coord2(g, cur, loop):
+        li = li_of[loop]
+        t1 = g.t1(loop)
+        vals = _candidate_values(t1)
+        base = row_of(g)
+        mat = np.repeat(base[None], len(vals), axis=0)
+        for j, n2 in enumerate(vals):
+            n1 = t1 // n2
+            mat[j, li] = (1, n1 if n1 > 1 else 1, n2)
+        legal = space.legalize_matrix(mat)
+        objs = batch_objs(legal)
+        improved = False
+        for j, v in enumerate(objs):
+            if v < cur - 1e-12:
+                cur = v
+                g = genome_from_row(legal[j], names)
+                improved = True
+        return g, cur, improved
 
     for _ in range(starts):
         g = space.sample(rng)
-        cur = _objective(model, g, objective)
+        cur = _objective(model, g, objective, scales)
         for _ in range(sweeps):
             improved = False
             for loop in wl.loop_names:
+                if batch_model is not None:
+                    g, cur, imp = scan_coord1(g, cur, loop)
+                    improved |= imp
+                    if space.has_level2(loop):
+                        g, cur, imp = scan_coord2(g, cur, loop)
+                        improved |= imp
+                    continue
                 lb = wl.loop(loop).bound
                 # coordinate 1: the array-partition tile T1 (via n1)
                 for t1 in _candidate_values(lb):
@@ -111,7 +205,7 @@ def solve(space: GenomeSpace, model: PerformanceModel,
                     n2 = min(cand.triples[loop][2], t1)
                     cand.triples[loop] = (1, max(1, t1 // max(1, n2)), n2)
                     cand = space.legalize(cand)
-                    v = _objective(model, cand, objective)
+                    v = _objective(model, cand, objective, scales)
                     if v < cur - 1e-12:
                         cur, g, improved = v, cand, True
                 # coordinate 2: the level-2 split (latency hiding / SIMD)
@@ -121,7 +215,7 @@ def solve(space: GenomeSpace, model: PerformanceModel,
                         cand = g.copy()
                         cand.triples[loop] = (1, max(1, t1 // n2), n2)
                         cand = space.legalize(cand)
-                        v = _objective(model, cand, objective)
+                        v = _objective(model, cand, objective, scales)
                         if v < cur - 1e-12:
                             cur, g, improved = v, cand, True
             if not improved:
@@ -136,11 +230,11 @@ def solve(space: GenomeSpace, model: PerformanceModel,
 
 def seed_population(space: GenomeSpace, model: PerformanceModel,
                     objective: str = "obj3_comm_comp", n: int = 8,
-                    seed: int = 0) -> List[Genome]:
+                    seed: int = 0, batch_model=None) -> List[Genome]:
     """Several MP solutions from different starts, used as evo seeds."""
     out: List[Genome] = []
     for i in range(n):
         res = solve(space, model, objective=objective, starts=2, sweeps=4,
-                    seed=seed + 101 * i)
+                    seed=seed + 101 * i, batch_model=batch_model)
         out.append(res.genome)
     return out

@@ -352,25 +352,37 @@ class BatchPerformanceModel:
     def stack(self, genomes: Sequence[Genome]
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Stack genomes into (n0, n1, n2) int64 matrices of shape [B, L]."""
-        B, L = len(genomes), len(self._names)
-        n0 = np.empty((B, L), dtype=np.int64)
-        n1 = np.empty((B, L), dtype=np.int64)
-        n2 = np.empty((B, L), dtype=np.int64)
-        for b, g in enumerate(genomes):
-            for j, name in enumerate(self._names):
-                n0[b, j], n1[b, j], n2[b, j] = g.triples[name]
-        return n0, n1, n2
+        from .design_space import genomes_to_matrix
+        arr = genomes_to_matrix(genomes, self._names)
+        return arr[:, :, 0], arr[:, :, 1], arr[:, :, 2]
 
     # -- vector helpers (operate on stacked matrices) ----------------------
+    @staticmethod
+    def _colprod(mat: np.ndarray, cols) -> np.ndarray:
+        """Product of selected columns via chained multiplies (identical
+        integer math to ``np.prod(mat[:, cols], axis=1)`` without the
+        reduction-wrapper overhead that dominates at population sizes)."""
+        if not cols:
+            return np.ones(mat.shape[0], dtype=np.int64)
+        out = mat[:, cols[0]]
+        for c in cols[1:]:
+            out = out * mat[:, c]
+        return out
+
     def _transfer(self, nbytes: np.ndarray) -> np.ndarray:
         return self.hw.dma_overhead_cycles + np.ceil(
             nbytes / self.hw.dram_bus_bytes)
 
     def _tile_bytes(self, arr: dict, t1: np.ndarray) -> np.ndarray:
-        elems = np.ones(t1.shape[0], dtype=np.int64)
+        elems = None
         for dim, cs in zip(arr["dims"], arr["coeffs"]):
-            size = ((t1[:, dim] - 1) * cs).sum(axis=1) + 1
-            elems = elems * size
+            if len(dim) == 1 and cs[0] == 1:
+                size = t1[:, dim[0]]
+            else:
+                size = np.add.reduce((t1[:, dim] - 1) * cs, axis=1) + 1
+            elems = size if elems is None else elems * size
+        if elems is None:
+            elems = np.ones(t1.shape[0], dtype=np.int64)
         return elems * self.desc.dtype_bytes
 
     def _prefix_products(self, n0: np.ndarray) -> np.ndarray:
@@ -390,16 +402,47 @@ class BatchPerformanceModel:
             return episodes, np.zeros_like(episodes)
         if not arr["flow"]:
             return np.zeros_like(episodes), episodes
-        fresh = episodes // np.prod(n0[:, arr["flow"]], axis=1)
+        fresh = episodes // self._colprod(n0, arr["flow"])
         return episodes - fresh, episodes
+
+    def _resources_matrix(self, n1: np.ndarray, n2: np.ndarray,
+                          t1: np.ndarray, tb) -> Tuple[np.ndarray, ...]:
+        """(dsp, bram, lut) for stacked level matrices — the single copy
+        of the resource model shared by every matrix entry point (the MP
+        objectives and the search penalty must never desynchronize)."""
+        hw = self.hw
+        pes = self._colprod(n1, self._space)
+        simd = n2[:, self._simd]
+        lanes = pes * simd
+        dsp = lanes * hw.dsp_per_lane
+        port_brams = np.ceil(simd * self.desc.dtype_bytes * 8
+                             / hw.bram_port_bits).astype(np.int64)
+        total_bram = np.zeros(n1.shape[0], dtype=np.int64)
+        for ai, a in enumerate(self._arrays):
+            banks = np.maximum(1, self._colprod(n1, a["bank_loops"]))
+            bank_bytes = np.ceil(tb[ai] / banks)
+            per_bank = np.maximum(
+                port_brams,
+                np.ceil(2 * bank_bytes / hw.bram_bytes).astype(np.int64))
+            n = 2 * banks * per_bank
+            if a["needs_inbound_partials"]:
+                n = n * 2
+            total_bram += n
+        acc_elems = self._colprod(t1, self._par)
+        acc_elems = np.ceil(acc_elems / np.maximum(1, pes)).astype(np.int64)
+        acc_bytes = acc_elems * self.desc.dtype_bytes
+        pe_bram = np.where(
+            acc_bytes <= 1024, 0,
+            pes * np.ceil(2 * acc_bytes / hw.bram_bytes).astype(np.int64))
+        total_bram = total_bram + pe_bram
+        lut = pes * hw.lut_per_pe + lanes * hw.lut_per_lane
+        return dsp, total_bram, lut
 
     def _compute_cycles_per_tile(self, n1: np.ndarray, n2: np.ndarray,
                                  t1: np.ndarray) -> np.ndarray:
-        pes = np.prod(n1[:, self._space], axis=1) if self._space else \
-            np.ones(n1.shape[0], dtype=np.int64)
+        pes = self._colprod(n1, self._space)
         simd = n2[:, self._simd]
-        par = np.prod(t1[:, self._par], axis=1) if self._par else \
-            np.ones(n1.shape[0], dtype=np.int64)
+        par = self._colprod(t1, self._par)
         par_per_pe = np.maximum(1, par // np.maximum(1, pes))
         red = np.ones(n1.shape[0], dtype=np.int64)
         for j in self._red:
@@ -410,22 +453,43 @@ class BatchPerformanceModel:
         ii = np.where(red > 1,
                       np.maximum(par_per_pe, self.hw.mac_pipeline_depth),
                       par_per_pe)
-        fill_drain = n1[:, self._space].sum(axis=1) + self.hw.mac_pipeline_depth
+        fill_drain = np.add.reduce(n1[:, self._space], axis=1) \
+            + self.hw.mac_pipeline_depth
         return red * ii + fill_drain
 
     # -- public metrics ----------------------------------------------------
     def evaluate(self, genomes: Sequence[Genome],
                  use_max_model: bool = False) -> BatchEvaluation:
         n0, n1, n2 = self.stack(genomes)
+        return self.evaluate_matrix(n0, n1, n2, use_max_model=use_max_model)
+
+    def evaluate_matrix(self, n0: np.ndarray, n1: np.ndarray,
+                        n2: np.ndarray,
+                        use_max_model: bool = False) -> BatchEvaluation:
+        """Matrix-native entry point: level matrices of shape [B, L] in
+        ``wl.loop_names`` order, no ``Genome`` objects anywhere (the SoA
+        engine's per-generation call — ``stack()`` stays off this path)."""
+        return self._metrics(n0, n1, n2, use_max_model, full=True)
+
+    def _metrics(self, n0, n1, n2, use_max_model: bool, full: bool):
+        """Shared metric pipeline.  ``full=False`` computes only what the
+        search fitness needs (latency + resources + penalty), skipping the
+        off-chip/feasibility aggregates — the per-generation fast path.
+        Every operation retained runs in the identical order as the full
+        path, so fitness stays bit-equal to the scalar oracle either way.
+        """
         t1 = n1 * n2
         B = n0.shape[0]
         hw = self.hw
+        arrays = self._arrays
 
-        tb = {a["name"]: self._tile_bytes(a, t1) for a in self._arrays}
-        xfer = {name: self._transfer(b) for name, b in tb.items()}
+        tb = [self._tile_bytes(a, t1) for a in arrays]
+        xfer = [self._transfer(b) for b in tb]
         prefix = self._prefix_products(n0)
-        events = {a["name"]: self._events(a, n0, prefix)
-                  for a in self._arrays}
+        need_events = full or use_max_model
+        events = [self._events(a, n0, prefix)
+                  if need_events or (a["is_output"] and a["flow"]) else None
+                  for a in arrays]
 
         c_tile = self._compute_cycles_per_tile(n1, n2, t1)
         c_tile_f = c_tile.astype(np.float64)
@@ -433,72 +497,43 @@ class BatchPerformanceModel:
         # prologue / epilogue (array order matches the scalar model)
         prologue = np.zeros(B)
         epilogue = np.zeros(B)
-        for a in self._arrays:
+        for a, x in zip(arrays, xfer):
             if a["is_output"]:
-                epilogue += xfer[a["name"]]
+                epilogue += x
             else:
-                prologue += xfer[a["name"]]
+                prologue += x
 
         # steady state grouped by odometer carry depth
         steady = np.zeros(B)
         for p in range(1, len(self._band) + 1):
             n_p = prefix[:, p] - prefix[:, p - 1]
             dma = np.zeros(B)
-            for a in self._arrays:
+            for ai, a in enumerate(arrays):
                 if a["maxpos"] < p:
                     continue
-                dma += xfer[a["name"]]
+                dma += xfer[ai]
                 if a["is_output"] and a["flow"]:
-                    load, store = events[a["name"]]
-                    dma += (load / np.maximum(1, store)) * xfer[a["name"]]
+                    load, store = events[ai]
+                    dma += (load / np.maximum(1, store)) * xfer[ai]
             step = np.maximum(c_tile_f, dma)
             steady += np.where(n_p > 0, n_p * step, 0.0)
         steady = steady + c_tile_f
         latency = (prologue + steady) + epilogue
 
         # total DMA cycles + off-chip traffic (array order preserved)
-        dma_total = np.zeros(B)
-        off_chip = np.zeros(B, dtype=np.int64)
-        for a in self._arrays:
-            load, store = events[a["name"]]
-            ev = load + store
-            dma_total += ev * xfer[a["name"]]
-            off_chip += ev * tb[a["name"]]
+        dma_total = off_chip = None
+        if need_events:
+            dma_total = np.zeros(B)
+            off_chip = np.zeros(B, dtype=np.int64)
+            for ai, a in enumerate(arrays):
+                load, store = events[ai]
+                ev = load + store
+                dma_total += ev * xfer[ai]
+                if full:
+                    off_chip += ev * tb[ai]
 
         # resources
-        pes = np.prod(n1[:, self._space], axis=1) if self._space else \
-            np.ones(B, dtype=np.int64)
-        simd = n2[:, self._simd]
-        lanes = pes * simd
-        dsp = lanes * hw.dsp_per_lane
-        port_brams = np.ceil(simd * self.desc.dtype_bytes * 8
-                             / hw.bram_port_bits).astype(np.int64)
-        total_bram = np.zeros(B, dtype=np.int64)
-        for a in self._arrays:
-            banks = np.prod(n1[:, a["bank_loops"]], axis=1) \
-                if a["bank_loops"] else np.ones(B, dtype=np.int64)
-            banks = np.maximum(1, banks)
-            bank_bytes = np.ceil(tb[a["name"]] / banks)
-            per_bank = np.maximum(
-                port_brams,
-                np.ceil(2 * bank_bytes / hw.bram_bytes).astype(np.int64))
-            n = 2 * banks * per_bank
-            if a["needs_inbound_partials"]:
-                n = n * 2
-            total_bram += n
-        acc_elems = np.prod(t1[:, self._par], axis=1) if self._par else \
-            np.ones(B, dtype=np.int64)
-        acc_elems = np.ceil(acc_elems / np.maximum(1, pes)).astype(np.int64)
-        acc_bytes = acc_elems * self.desc.dtype_bytes
-        pe_bram = np.where(
-            acc_bytes <= 1024, 0,
-            pes * np.ceil(2 * acc_bytes / hw.bram_bytes).astype(np.int64))
-        total_bram = total_bram + pe_bram
-        lut = pes * hw.lut_per_pe + lanes * hw.lut_per_lane
-
-        feasible = (dsp <= hw.dsp_available) & (total_bram <= hw.bram_available)
-        if hw.lut_available:
-            feasible &= lut <= hw.lut_available
+        dsp, total_bram, lut = self._resources_matrix(n1, n2, t1, tb)
 
         # fitness: negative latency with the smooth resource-overuse penalty
         num_tiles = prefix[:, -1]
@@ -517,7 +552,12 @@ class BatchPerformanceModel:
                 lut > hw.lut_available,
                 _quartic(lut / hw.lut_available), 1.0)
         fitness = -lat * penalty
+        if not full:
+            return fitness
 
+        feasible = (dsp <= hw.dsp_available) & (total_bram <= hw.bram_available)
+        if hw.lut_available:
+            feasible &= lut <= hw.lut_available
         return BatchEvaluation(
             latency_cycles=latency, compute_cycles_per_tile=c_tile,
             dma_cycles_total=dma_total, num_tiles=num_tiles,
@@ -530,6 +570,29 @@ class BatchPerformanceModel:
     def fitness(self, genomes: Sequence[Genome],
                 use_max_model: bool = False) -> np.ndarray:
         return self.evaluate(genomes, use_max_model=use_max_model).fitness
+
+    def fitness_matrix(self, mat: np.ndarray,
+                       use_max_model: bool = False) -> np.ndarray:
+        """Fitness of a ``[B, L, 3]`` SoA population matrix (fast path:
+        skips the aggregates fitness does not need)."""
+        return self._metrics(mat[:, :, 0], mat[:, :, 1], mat[:, :, 2],
+                             use_max_model, full=False)
+
+    def resource_traffic_matrix(self, mat: np.ndarray):
+        """(dsp, bram, lut, off_chip_bytes) for a ``[B, L, 3]`` matrix —
+        exactly what the MP objectives consume, skipping the whole latency
+        pipeline.  Values are bit-identical to :meth:`evaluate`'s."""
+        n0, n1, n2 = mat[:, :, 0], mat[:, :, 1], mat[:, :, 2]
+        t1 = n1 * n2
+        arrays = self._arrays
+        tb = [self._tile_bytes(a, t1) for a in arrays]
+        prefix = self._prefix_products(n0)
+        off_chip = np.zeros(n0.shape[0], dtype=np.int64)
+        for ai, a in enumerate(arrays):
+            load, store = self._events(a, n0, prefix)
+            off_chip += (load + store) * tb[ai]
+        dsp, total_bram, lut = self._resources_matrix(n1, n2, t1, tb)
+        return dsp, total_bram, lut, off_chip
 
     def throughput(self, genomes: Sequence[Genome]) -> np.ndarray:
         secs = self.latency_cycles(genomes) / self.hw.freq_hz

@@ -70,49 +70,9 @@ class TuneReport:
         return min(pool, key=lambda r: r.latency_cycles)
 
 
-def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
-                hw: HardwareProfile = U250,
-                cfg: Optional[EvoConfig] = None,
-                use_mp_seed: bool = True,
-                mp_objective: str = "obj3_comm_comp",
-                divisors_only: bool = False,
-                desc: Optional[DesignDescriptor] = None,
-                model: Optional[PerformanceModel] = None,
-                batch_model=None,
-                abort_latency: Optional[float] = None,
-                abort_factor: float = 3.0,
-                probe_epochs: int = 8,
-                extra_seeds: Tuple[Genome, ...] = ()) -> DesignResult:
-    """Tune the tiling of a single (dataflow, permutation) design.
-
-    ``desc``/``model``/``batch_model`` may be supplied prebuilt (the engine
-    caches them per design).  ``abort_latency`` is the sweep incumbent: once
-    ``probe_epochs`` have run, the search is cut off if its best genome's
-    *raw* latency (penalty-free, so an infeasible-but-promising probe never
-    triggers it) is still worse than ``abort_factor x`` the incumbent.
-    ``extra_seeds`` are pre-legalized genomes injected alongside the MP
-    seeds — the registry's transfer warm start.
-    """
-    t0 = time.perf_counter()
-    cfg = cfg or EvoConfig()
-    desc = desc or build_descriptor(wl, dataflow, perm)
-    model = model or PerformanceModel(desc, hw)
-    space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
-
-    seeds: List[Genome] = list(extra_seeds)
-    if use_mp_seed:
-        seeds += mp_solver.seed_population(
-            space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
-            seed=cfg.seed)
-
-    stop_fn = None
-    if abort_latency is not None:
-        def stop_fn(epoch: int, best_f: float, best_g: Genome) -> bool:
-            return epoch >= probe_epochs and \
-                model.latency_cycles(best_g) > abort_factor * abort_latency
-
-    evo = evolve(TilingProblem(space, model, batch_model=batch_model),
-                 cfg, seeds=seeds, stop_fn=stop_fn)
+def _design_result(dataflow, perm, desc, model, evo, t0) -> "DesignResult":
+    """Materialize a ``DesignResult`` from a finished (or probe) search —
+    the single place the result metrics are derived from a genome."""
     g = evo.best
     rep = model.latency(g)
     res = model.resources(g)
@@ -126,6 +86,109 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
         seconds=time.perf_counter() - t0,
         aborted=evo.aborted,
     )
+
+
+def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
+                hw: HardwareProfile = U250,
+                cfg: Optional[EvoConfig] = None,
+                use_mp_seed: bool = True,
+                mp_objective: str = "obj3_comm_comp",
+                divisors_only: bool = False,
+                desc: Optional[DesignDescriptor] = None,
+                model: Optional[PerformanceModel] = None,
+                batch_model=None,
+                abort_latency: Optional[float] = None,
+                abort_factor: float = 3.0,
+                probe_epochs: int = 8,
+                incumbent_fn=None,
+                triage: bool = False,
+                triage_factor: Optional[float] = None,
+                extra_seeds: Tuple[Genome, ...] = ()) -> DesignResult:
+    """Tune the tiling of a single (dataflow, permutation) design.
+
+    ``desc``/``model``/``batch_model`` may be supplied prebuilt (the engine
+    caches them per design).  ``abort_latency`` is the sweep incumbent: once
+    ``probe_epochs`` have run, the search is cut off if its best genome's
+    *raw* latency (penalty-free, so an infeasible-but-promising probe never
+    triggers it) is still worse than ``abort_factor x`` the incumbent.
+    ``incumbent_fn`` generalizes it to a *live* incumbent: a zero-arg
+    callable polled every epoch (the engine's shared cross-process value),
+    so a design can be cut mid-flight by a better result that landed after
+    this search was launched.  With ``triage=True``, ``use_mp_seed`` on
+    and an incumbent already known, a short probe search (transfer seeds
+    only, no MP solutions) runs before the far more expensive MP seeding:
+    a design whose probe best is already ``abort_factor x`` off the
+    incumbent is cut without ever paying for seeding — the probe is
+    side-effect-free, so surviving designs return results bit-identical
+    to ``triage=False``.  ``triage_factor`` (default: ``abort_factor``)
+    lets the probe cut harder than the mid-flight abort: the probe
+    compares a finished fixed-epoch search, which is a far more stable
+    signal than a live search's epoch-by-epoch best.  ``extra_seeds``
+    are pre-legalized genomes injected alongside the MP seeds — the
+    registry's transfer warm start.
+    """
+    t0 = time.perf_counter()
+    cfg = cfg or EvoConfig()
+    desc = desc or build_descriptor(wl, dataflow, perm)
+    model = model or PerformanceModel(desc, hw)
+    if batch_model is None:
+        from .perf_model import BatchPerformanceModel
+        batch_model = BatchPerformanceModel(desc, hw)
+    space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
+
+    if triage and use_mp_seed and incumbent_fn is not None:
+        # without MP seeding there is no expensive pre-evolve stage for
+        # the probe to skip — the in-search stop_fn abort already covers
+        # that case at no extra cost
+        inc = incumbent_fn()
+        if inc is not None:
+            # the probe sees the cheap seeds (registry transfer) but not
+            # the MP solutions — MP is exactly the cost triage avoids; it
+            # is bounded by the design's budget slice, and its evals are
+            # reported only for aborted designs (survivors rerun from
+            # scratch and report the real search's evals, keeping their
+            # results bit-identical to triage=False)
+            probe_cfg = dataclasses.replace(
+                cfg, epochs=max(1, probe_epochs),
+                time_budget_s=cfg.time_budget_s, max_evals=None)
+            probe = evolve(TilingProblem(space, model,
+                                         batch_model=batch_model),
+                           probe_cfg, seeds=list(extra_seeds))
+            cut = triage_factor if triage_factor is not None else \
+                abort_factor
+            if model.latency_cycles(probe.best) > cut * inc:
+                probe.aborted = True
+                return _design_result(dataflow, perm, desc, model, probe,
+                                      t0)
+
+    seeds: List[Genome] = list(extra_seeds)
+    if use_mp_seed:
+        seeds += mp_solver.seed_population(
+            space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
+            seed=cfg.seed, batch_model=batch_model)
+
+    if cfg.time_budget_s is not None:
+        # the slice is a per-design wall-clock budget: whatever the MP
+        # seeding (and triage probe) consumed comes out of the evolve
+        # share, so a sweep's time_budget_s bounds real elapsed time
+        remaining = cfg.time_budget_s - (time.perf_counter() - t0)
+        cfg = dataclasses.replace(cfg, time_budget_s=max(0.0, remaining))
+
+    stop_fn = None
+    if incumbent_fn is None and abort_latency is not None:
+        def incumbent_fn():
+            return abort_latency
+    if incumbent_fn is not None:
+        def stop_fn(epoch: int, best_f: float, best_g: Genome) -> bool:
+            if epoch < probe_epochs:
+                return False
+            inc = incumbent_fn()
+            return inc is not None and \
+                model.latency_cycles(best_g) > abort_factor * inc
+
+    evo = evolve(TilingProblem(space, model, batch_model=batch_model),
+                 cfg, seeds=seeds, stop_fn=stop_fn)
+    return _design_result(dataflow, perm, desc, model, evo, t0)
 
 
 def tune_workload(wl: Workload, hw: HardwareProfile = U250,

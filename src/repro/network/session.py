@@ -166,7 +166,8 @@ class NetworkSession:
                  cfg: Optional[EvoConfig] = None,
                  registry=None,
                  session: Optional[SessionConfig] = None,
-                 assign: Optional[AssignConfig] = None):
+                 assign: Optional[AssignConfig] = None,
+                 time_budget_s: Optional[float] = None):
         if len(graph) == 0:
             raise ValueError("empty LayerGraph")
         self.graph = graph
@@ -177,6 +178,12 @@ class NetworkSession:
         # where the per-class sweep is already the parallel unit
         self.session = session or SessionConfig(executor="serial")
         self.assign = assign or AssignConfig()
+        # wall-clock budget for the per-class sweeps, spent with the same
+        # rollover rule as SearchSession's per-design slices: registry
+        # hits and fast classes refund their share to the classes still
+        # queued (a cached class costs ~0, so a warm NetworkSession gives
+        # nearly the whole budget to the classes that actually search)
+        self.time_budget_s = time_budget_s
         self._classes = graph.classes()
         self._reports: Dict[ClassKey, TuneReport] = {}
         self._fits: Dict[Tuple[ClassKey, int], TilingFit] = {}
@@ -184,13 +191,24 @@ class NetworkSession:
 
     # -- stage 1+2: per-class sweeps -----------------------------------
     def tune_classes(self) -> Dict[ClassKey, TuneReport]:
-        for key, cls in self._classes.items():
-            if key in self._reports:
-                continue
+        import time as _time
+        budget_left = self.time_budget_s
+        todo = [k for k in self._classes if k not in self._reports]
+        for n_left, key in zip(range(len(todo), 0, -1), todo):
+            cls = self._classes[key]
+            slice_s = None
+            if budget_left is not None:
+                slice_s = max(0.0, budget_left) / n_left
+            t0 = _time.perf_counter()
             sess = SearchSession(cls.wl, hw=self.hw, cfg=self.cfg,
                                  registry=self.registry,
+                                 time_budget_s=slice_s,
                                  session=self.session)
             self._reports[key] = sess.run()
+            if budget_left is not None:
+                # charge actual wall-clock: a cheap class (registry hit,
+                # early abort) leaves its unused share in the pool
+                budget_left -= _time.perf_counter() - t0
         return self._reports
 
     # -- stage 3: candidate arrays + cost matrix -----------------------

@@ -156,6 +156,7 @@ def seeds_from_neighbors(neighbors: Sequence[Tuple[float, Record]],
     """
     out: Dict[DesignKey, List[Genome]] = {}
     seen: Dict[DesignKey, set] = {}
+    spaces: Dict[Tuple[str, ...], GenomeSpace] = {}
     loop_names = set(wl.loop_names)
     for _, rec in neighbors:
         for entry in [rec.best] + list(rec.pareto):
@@ -165,7 +166,10 @@ def seeds_from_neighbors(neighbors: Sequence[Tuple[float, Record]],
             key = design_key(dataflow, perm)
             if len(out.get(key, ())) >= max_per_design:
                 continue
-            space = GenomeSpace(wl, dataflow, divisors_only=divisors_only)
+            space = spaces.get(dataflow)
+            if space is None:
+                space = spaces[dataflow] = GenomeSpace(
+                    wl, dataflow, divisors_only=divisors_only)
             g = space.legalize(_entry_genome(entry))
             gk = g.key()
             if gk in seen.setdefault(key, set()):

@@ -90,6 +90,103 @@ def test_evolve_identical_through_batch_path():
     assert batch_res.trace[-1].evals_per_sec > 0
 
 
+# ---------------------------------------------------------------------- #
+# Structure-of-arrays engine vs the object-path oracle
+# ---------------------------------------------------------------------- #
+_SOA_CASES = [
+    ("mm", mm_1024(), ("i", "j"), {}),
+    ("mm-rect", matmul(130, 70, 50), ("j",), {}),
+    ("mm-divisors", matmul(256, 256, 256), ("i", "j"),
+     {"divisors_only": True}),
+    ("mm-maxmodel", matmul(256, 256, 256), ("i", "k"),
+     {"use_max_model": True}),
+    ("conv", cnn_validation(), ("o", "h"), {}),
+    ("conv-strided", conv2d(16, 16, 14, 14, 3, 3, stride=2), ("i",), {}),
+]
+
+
+@pytest.mark.parametrize("tag,wl,df,opts", _SOA_CASES,
+                         ids=[c[0] for c in _SOA_CASES])
+def test_soa_engine_identical_to_object_path(tag, wl, df, opts):
+    """Fixed seed => the SoA engine (matrix populations, getrandbits RNG
+    replicas, byte-key dedup, argsort selection) returns the identical
+    best genome, fitness, eval count and per-epoch trace as the
+    object-path engine — for MM and CONV, including strided windows and
+    the divisor-snapped subspace."""
+    divisors_only = opts.get("divisors_only", False)
+    use_max = opts.get("use_max_model", False)
+    for perm in pruned_permutations(wl):
+        desc = build_descriptor(wl, df, perm)
+        model = PerformanceModel(desc, U250)
+        space = GenomeSpace(wl, df, divisors_only=divisors_only)
+        for seed in (0, 7):
+            cfg = EvoConfig(epochs=15, population=24, seed=seed)
+            obj = evolve(TilingProblem(space, model, soa=False,
+                                       use_max_model=use_max), cfg)
+            soa = evolve(TilingProblem(space, model,
+                                       use_max_model=use_max), cfg)
+            assert soa.best.key() == obj.best.key()
+            assert soa.best_fitness == obj.best_fitness
+            assert soa.evals == obj.evals
+            assert [t.best_fitness for t in soa.trace] == \
+                [t.best_fitness for t in obj.trace]
+            assert [t.evals for t in soa.trace] == \
+                [t.evals for t in obj.trace]
+
+
+def test_soa_engine_with_seeds_and_stop_fn():
+    """Transfer/MP seeds enter the SoA population unchanged and stop_fn
+    sees materialized genomes — same abort epoch as the object path."""
+    import random as _random
+    wl = matmul(512, 512, 512)
+    perm = pruned_permutations(wl)[0]
+    model = PerformanceModel(build_descriptor(wl, ("i", "j"), perm), U250)
+    space = GenomeSpace(wl, ("i", "j"))
+    seeds = [space.sample(_random.Random(99)) for _ in range(3)]
+    cfg = EvoConfig(epochs=20, population=16, seed=1)
+
+    calls = {"obj": [], "soa": []}
+
+    def mk_stop(key):
+        def stop(epoch, best_f, best_g):
+            calls[key].append((epoch, best_f, best_g.key()))
+            return epoch >= 6
+        return stop
+
+    obj = evolve(TilingProblem(space, model, soa=False), cfg, seeds=seeds,
+                 stop_fn=mk_stop("obj"))
+    soa = evolve(TilingProblem(space, model), cfg, seeds=seeds,
+                 stop_fn=mk_stop("soa"))
+    assert obj.aborted and soa.aborted
+    assert calls["obj"] == calls["soa"]
+    assert soa.best.key() == obj.best.key()
+    assert soa.evals == obj.evals
+
+
+def test_fitness_matrix_matches_object_batch():
+    """The matrix entry points produce the exact floats of the object
+    batch API (which is itself pinned to the scalar oracle)."""
+    import random as _random
+    from repro.core import genomes_to_matrix
+    wl = cnn_validation()
+    perm = pruned_permutations(wl)[0]
+    desc = build_descriptor(wl, ("o", "w"), perm)
+    batch = BatchPerformanceModel(desc, U250)
+    space = GenomeSpace(wl, ("o", "w"))
+    rng = _random.Random(2)
+    genomes = [space.sample(rng) for _ in range(64)]
+    mat = genomes_to_matrix(genomes, wl.loop_names)
+    assert list(batch.fitness_matrix(mat)) == list(batch.fitness(genomes))
+    assert list(batch.fitness_matrix(mat, use_max_model=True)) == \
+        list(batch.fitness(genomes, use_max_model=True))
+    ev = batch.evaluate(genomes)
+    dsp, bram, lut, off = batch.resource_traffic_matrix(mat)
+    assert list(dsp) == list(ev.dsp)
+    assert list(bram) == list(ev.bram)
+    assert list(lut) == list(ev.lut)
+    assert list(off) == list(ev.off_chip_bytes)
+
+
 def test_tpu_block_model_batch_matches_scalar():
     TpuMatmulModel, TpuMatmulProblem = _tpu_problem()
     model = TpuMatmulModel(M=1024, N=1024, K=4096)

@@ -93,3 +93,88 @@ def test_descriptor_model_cache_reused():
     d1 = session.built(session.designs[0])
     d2 = session.built(session.designs[0])
     assert d1[0] is d2[0] and d1[1] is d2[1] and d1[2] is d2[2]
+
+
+def test_time_budget_rolls_leftovers_forward():
+    """A design that exhausts its epochs early (cheap search) refunds its
+    unused slice: later designs' dispatched budgets grow instead of the
+    leftover seconds evaporating."""
+    wl = mm_validation()
+    budget = 60.0   # huge vs the actual runtime of epochs=4 searches
+    session = SearchSession(
+        wl, cfg=EvoConfig(epochs=4, population=12, seed=0),
+        time_budget_s=budget,
+        session=SessionConfig(executor="serial", early_abort=False))
+    session.run()
+    log = session.budget_log
+    assert len(log) == len(session.designs)
+    base = budget / len(session.designs)
+    # first design gets the naive even share...
+    assert abs(log[0] - base) < 1e-9
+    # ...and every later design inherits the refunds of the earlier ones
+    # (the same seconds are re-dispatched, so slices grow monotonically;
+    # the final design may be offered nearly the whole unspent budget)
+    assert log[-1] > base
+    assert log == sorted(log)
+    # what was actually *consumed* stays within the budget
+    spent = sum(r.evo.seconds for r in session.report.results)
+    assert spent <= budget
+
+
+def test_time_budget_is_actually_spent_searching():
+    """With a budget that bites, the sweep uses close to the whole budget
+    rather than len(designs) x (tiny fixed slice leftovers)."""
+    wl = matmul(128, 128, 128)
+    budget = 1.0
+    session = SearchSession(
+        wl, cfg=EvoConfig(epochs=10 ** 6, population=24, seed=0),
+        use_mp_seed=False, time_budget_s=budget,
+        session=SessionConfig(executor="serial", early_abort=False))
+    report = session.run()
+    spent = sum(r.evo.seconds for r in report.results)
+    assert spent >= 0.8 * budget
+    assert spent <= 1.5 * budget
+
+
+def test_parallel_payload_roundtrip_and_schedule():
+    """wide_first scheduling reorders only execution: results stay in
+    design order and match serial bit-for-bit (slim payloads preserve
+    genomes, traces and metrics exactly)."""
+    wl = mm_validation()
+    serial = SearchSession(wl, cfg=CFG,
+                           session=SessionConfig(executor="serial",
+                                                 early_abort=False)).run()
+    par = SearchSession(wl, cfg=CFG,
+                        session=SessionConfig(executor="process",
+                                              max_workers=2,
+                                              early_abort=False,
+                                              schedule="wide_first")).run()
+    assert _latencies(serial) == _latencies(par)
+    for rs, rp in zip(serial.results, par.results):
+        assert rs.evo.best.key() == rp.evo.best.key()
+        assert rs.evo.evals == rp.evo.evals
+        assert [t.best_fitness for t in rs.evo.trace] == \
+            [t.best_fitness for t in rp.evo.trace]
+        assert rs.dsp == rp.dsp and rs.bram == rp.bram
+        assert rs.feasible == rp.feasible
+
+
+def test_triage_skips_dominated_designs_cheaply():
+    """With an incumbent known, dominated designs are cut by the pre-MP
+    probe (aborted, far fewer evals) while the winner is untouched."""
+    wl = matmul(256, 256, 256)
+    cfg = EvoConfig(epochs=20, population=24, seed=0)
+    full = SearchSession(wl, cfg=cfg,
+                         session=SessionConfig(executor="serial",
+                                               early_abort=False)).run()
+    fast = SearchSession(wl, cfg=cfg,
+                         session=SessionConfig(executor="serial",
+                                               early_abort=True,
+                                               abort_factor=2.0,
+                                               probe_epochs=5,
+                                               triage=True)).run()
+    assert sum(r.aborted for r in fast.results) > 0
+    assert sum(r.evo.evals for r in fast.results) < \
+        sum(r.evo.evals for r in full.results)
+    assert fast.best.latency_cycles == full.best.latency_cycles
+    assert not fast.best.aborted

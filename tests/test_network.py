@@ -250,3 +250,22 @@ def test_kernel_pretune_warm_run_zero_evals(tmp_path):
                                 registry=store, evals=150)
     assert warm["tuned"] == 0
     assert warm["disk_hits"] == warm["shapes"] == cold["shapes"]
+
+
+def test_network_session_time_budget_rollover():
+    """A NetworkSession wall-clock budget flows class -> class with the
+    same rollover rule as SearchSession: classes that finish under their
+    slice leave the remainder to the classes still queued, so the run
+    completes well under budget without starving any class."""
+    import time as _time
+    g = conv_graph("toy", TOY_LAYERS)
+    budget = 120.0   # enormous vs the tiny epoch counts: all classes end early
+    sess = NetworkSession(g, cfg=TINY, time_budget_s=budget)
+    t0 = _time.perf_counter()
+    reports = sess.tune_classes()
+    elapsed = _time.perf_counter() - t0
+    assert len(reports) == len(g.classes())
+    assert elapsed < budget
+    # every class actually searched (budget never collapsed to zero)
+    assert all(sum(r.evo.evals for r in rep.results) > 0
+               for rep in reports.values())

@@ -132,3 +132,43 @@ def test_lr_schedule_bounds(step):
     assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
     if step >= cfg.total_steps:
         assert abs(lr - cfg.lr * cfg.min_lr_frac) < 1e-8
+
+
+@given(st.integers(8, 64), st.integers(4, 30), st.integers(0, 2 ** 31),
+       st.booleans())
+@SET
+def test_soa_dedup_never_double_counts_evals(pop, epochs, seed, div_only):
+    """Property: across a whole SoA run, every genome reaching the batch
+    evaluator is globally unique (the per-generation ``np.unique``-style
+    pass plus the cross-generation byte-key set never re-evaluate a row),
+    and the reported ``evals`` equals exactly the number of unique
+    genomes evaluated."""
+    from repro.core import BatchPerformanceModel, EvoConfig, TilingProblem, \
+        evolve
+
+    wl = matmul(96, 48, 32)
+    df = ("i", "j")
+    space = GenomeSpace(wl, df, divisors_only=div_only)
+    desc = build_descriptor(wl, df, pruned_permutations(wl)[0])
+    model = PerformanceModel(desc, U250)
+
+    seen = set()
+    n_rows = 0
+
+    class Counting(BatchPerformanceModel):
+        def fitness_matrix(self, mat, use_max_model=False):
+            nonlocal n_rows
+            for row in mat:
+                key = row.tobytes()
+                assert key not in seen, "row evaluated twice"
+                seen.add(key)
+            n_rows += mat.shape[0]
+            return super().fitness_matrix(mat, use_max_model=use_max_model)
+
+    counting = Counting(desc, U250)
+    cfg = EvoConfig(epochs=epochs, population=pop,
+                    parents=max(2, pop // 4), elites=min(2, pop // 4),
+                    seed=seed)
+    res = evolve(TilingProblem(space, model, batch_model=counting), cfg)
+    assert res.evals == n_rows == len(seen)
+    assert res.evals <= pop * (epochs + 1)

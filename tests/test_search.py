@@ -137,3 +137,69 @@ def test_simulated_annealing_time_budget_reports_actual_evals():
                                         time_budget_s=0.05)
     assert res.evals == counting.calls
     assert 0 < res.evals < 3000
+
+
+# ---------------------------------------------------------------------- #
+# Vectorized baselines vs their scalar loops
+# ---------------------------------------------------------------------- #
+class _Passthrough:
+    """Non-PerformanceModel proxy => baselines take the scalar path."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def fitness(self, g):
+        return self.inner.fitness(g)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
+def test_random_search_vectorized_matches_scalar():
+    """The chunked matrix path draws the same RNG stream as the scalar
+    loop: same winner, same fitness, same exact eval count."""
+    wl, perm, desc, model, space = _setup()
+    vec = baselines.random_search(space, model, max_evals=700, seed=4)
+    scl = baselines.random_search(space, _Passthrough(model),
+                                  max_evals=700, seed=4)
+    assert vec.best.key() == scl.best.key()
+    assert vec.best_fitness == scl.best_fitness
+    assert vec.evals == scl.evals == 700
+
+
+def test_simulated_annealing_single_chain_matches_scalar():
+    """chains=1 on a plain model follows the historical scalar SA
+    trajectory exactly (same proposals, same acceptance coins)."""
+    wl, perm, desc, model, space = _setup()
+    vec = baselines.simulated_annealing(space, model, max_evals=500, seed=4)
+    scl = baselines.simulated_annealing(space, _Passthrough(model),
+                                        max_evals=500, seed=4)
+    assert vec.best.key() == scl.best.key()
+    assert vec.best_fitness == scl.best_fitness
+    assert vec.evals == scl.evals
+
+
+def test_simulated_annealing_chains_exact_eval_accounting():
+    wl, perm, desc, model, space = _setup()
+    res = baselines.simulated_annealing(space, model, max_evals=1000,
+                                        seed=0, chains=16)
+    # lockstep rounds: initial 16 + 61 full rounds of 16 = 992 <= 1000
+    assert res.evals == 16 + ((1000 - 16) // 16) * 16
+    assert res.evals <= 1000
+    assert res.best_fitness >= max(t.best_fitness for t in res.trace) - 1e-12
+
+
+def test_mp_solver_batched_matches_scalar_trajectory():
+    """The batched MP line search replays the scalar accept rule over
+    matrix-evaluated objectives: identical genome and objective value."""
+    from repro.core import BatchPerformanceModel
+    wl, perm, desc, model, space = _setup(matmul(192, 96, 64))
+    bm = BatchPerformanceModel(desc, U250)
+    for obj in mp_solver.OBJECTIVES:
+        a = mp_solver.solve(space, model, objective=obj, starts=2,
+                            sweeps=3, seed=11)
+        b = mp_solver.solve(space, model, objective=obj, starts=2,
+                            sweeps=3, seed=11, batch_model=bm)
+        assert a.genome.key() == b.genome.key()
+        assert a.obj_value == b.obj_value
+        assert a.feasible == b.feasible
