@@ -21,6 +21,15 @@ The acceptance gates from ISSUE 5 are asserted here (and run in CI):
   * best latency bit-identical across scalar/object/SoA engines at the
     same seed (the object path is the unchanged pre-refactor engine).
 
+ISSUE 6 adds the compiled-engine gates (section 4 — deliberately *after*
+the sweep section, because importing jax switches ``SearchSession`` off
+its fork fast path):
+
+  * jitted ``fitness_matrix`` >= 3x the NumPy matrix path at batch 4096
+    on CPU,
+  * multi-chain SA is near-free: 16 vmapped chains (16x the evals) run
+    within 2x the wall-clock of one chain.
+
 Timing gates use the best of ``_TRIALS`` runs — the equality gates are
 asserted on every run; only the wall-clock comparisons take the min.
 
@@ -45,6 +54,12 @@ from .common import emit, save_json
 
 _CFG = EvoConfig(epochs=30, population=64, seed=0)
 _TRIALS = 3          # timing gates take the best run (2-core CI is noisy)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def _time_to_frac(trace, frac: float = 0.9) -> float:
@@ -189,6 +204,78 @@ def bench_search_speed() -> None:
     assert t_par < t_serial, \
         f"parallel sweep {t_par:.2f}s not faster than serial {t_serial:.2f}s"
 
+    # 4) JAX compiled engine (ISSUE 6).  This section must stay *after*
+    # the sweep benchmarks: importing jax flips SearchSession off its
+    # fork-based process pool (`_fork_safe`), so the parallel-sweep gate
+    # above must run in a jax-free process image.
+    from repro.core import jax_engine_unavailable_reason
+    jax_section = {}
+    reason = jax_engine_unavailable_reason()
+    if reason is not None:
+        emit("search_speed_jax_engine", 0.0, f"skipped: {reason}")
+        jax_section = {"skipped": reason}
+    else:
+        from repro.core.jax_evolve import JaxEngineOps, \
+            simulated_annealing_jax
+        from repro.core.jax_model import JaxBatchModel
+        jm = JaxBatchModel(batch_model)
+        jm.fitness_matrix(mat)                      # compile + warm
+        t_jit = min(_timed(lambda: jm.fitness_matrix(mat))
+                    for _ in range(_TRIALS))
+        t_np = min(_timed(lambda: batch_model.fitness_matrix(mat))
+                   for _ in range(_TRIALS))
+        jit_speedup = t_np / t_jit
+        eval_jit = len(pool) / t_jit
+        emit("search_speed_eval_jit", t_jit / len(pool) * 1e6,
+             f"{eval_jit:.0f} evals/s ({jit_speedup:.2f}x numpy matrix)")
+
+        ops = JaxEngineOps(space, batch_model)
+        evo_jax = evolve(TilingProblem(space, model,
+                                       batch_model=batch_model),
+                         _CFG, engine="jax")        # compile + warm
+        evo_jax = min((evolve(TilingProblem(space, model,
+                                            batch_model=batch_model),
+                              _CFG, engine="jax")
+                       for _ in range(_TRIALS)), key=lambda r: r.seconds)
+
+        # multi-chain SA: 16 chains cover 16x the evals; near-free means
+        # the vmapped batch costs at most 2x one chain's wall-clock
+        sa_evals = 2000
+        sa_kw = dict(temperature=200.0, seed=0)
+        simulated_annealing_jax(ops, max_evals=sa_evals, chains=1, **sa_kw)
+        simulated_annealing_jax(ops, max_evals=16 * sa_evals, chains=16,
+                                **sa_kw)            # compile both shapes
+        t_sa1 = min(simulated_annealing_jax(ops, max_evals=sa_evals,
+                                            chains=1, **sa_kw).seconds
+                    for _ in range(_TRIALS))
+        t_sa16 = min(simulated_annealing_jax(ops, max_evals=16 * sa_evals,
+                                             chains=16, **sa_kw).seconds
+                     for _ in range(_TRIALS))
+        chain_ratio = t_sa16 / t_sa1
+        emit("search_speed_jax_evolve", 1e6 / evo_jax.evals_per_sec,
+             f"{evo_jax.evals_per_sec:.0f} evals/s "
+             f"({evo_jax.evals} evals, no dedup)")
+        emit("search_speed_jax_sa_chains", t_sa16 * 1e6,
+             f"16 chains {t_sa16 * 1e3:.1f}ms vs 1 chain "
+             f"{t_sa1 * 1e3:.1f}ms ({chain_ratio:.2f}x for 16x evals)")
+        # ---- ISSUE 6 gates ---------------------------------------------
+        assert jit_speedup >= 3.0, \
+            f"jit fitness_matrix {jit_speedup:.2f}x < 3x numpy at " \
+            f"batch {len(pool)}"
+        assert chain_ratio <= 2.0, \
+            f"chains=16 SA {t_sa16:.3f}s > 2x chains=1 {t_sa1:.3f}s"
+        jax_section = {
+            "batch": len(pool),
+            "jit_evals_per_sec": eval_jit,
+            "jit_fitness_speedup_vs_numpy_matrix": jit_speedup,
+            "evolve_evals_per_sec": evo_jax.evals_per_sec,
+            "evolve_best_latency_cycles": -evo_jax.best_fitness,
+            "sa_chain1_s": t_sa1,
+            "sa_chain16_s": t_sa16,
+            "sa_chains16_over_chain1": chain_ratio,
+            "sa_evals_per_chain_budget": sa_evals,
+        }
+
     save_json("search_speed", {
         "workload": wl.name,
         "design": f"[{','.join(df)}] {perm.label()}",
@@ -231,6 +318,7 @@ def bench_search_speed() -> None:
             "serial_best_latency": rep_serial.best.latency_cycles,
             "parallel_best_latency": rep_par.best.latency_cycles,
         },
+        "jax_engine": jax_section,
         "trace_soa": [
             {"evals": t.evals, "seconds": t.seconds,
              "best_fitness": t.best_fitness,

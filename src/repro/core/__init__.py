@@ -22,7 +22,9 @@ from .perf_model import (PerformanceModel, BatchPerformanceModel,
                          generate_model_source)
 from .simulator import simulate, SimReport
 from .evolutionary import (EvoConfig, EvoResult, Problem, SoaHandle,
-                           TilingProblem, evolve)
+                           TilingProblem, evolve,
+                           jax_engine_unavailable_reason,
+                           resolved_engine_name)
 from . import mp_solver, baselines
 from .tuner import tune_design, tune_workload, TuneReport, DesignResult
 from .engine import (SearchSession, SessionConfig, ParetoPoint,

@@ -50,7 +50,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .design_space import Genome, Permutation, enumerate_designs
 from .descriptor import DesignDescriptor, build_descriptor
-from .evolutionary import EvoConfig, EvoResult, TraceEntry
+from .evolutionary import (EvoConfig, EvoResult, TraceEntry,
+                           resolved_engine_name)
 from .hardware import HardwareProfile, U250
 from .perf_model import BatchPerformanceModel, PerformanceModel
 from .workloads import Workload
@@ -528,7 +529,8 @@ class SearchSession:
             raise ValueError(
                 f"unknown executor {self.session.executor!r}; "
                 "expected 'serial', 'thread' or 'process'")
-        self.report = TuneReport(workload=self.wl.name, results=results)
+        self.report = TuneReport(workload=self.wl.name, results=results,
+                                 engine=resolved_engine_name(self.cfg))
         if self.registry is not None:
             self._record()
         return self.report

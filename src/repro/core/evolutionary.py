@@ -20,6 +20,8 @@ seed returns the same best genome either way (tested in
 from __future__ import annotations
 
 import dataclasses
+import logging
+import os
 import random
 import time
 from typing import (Callable, Generic, List, Optional, Sequence, Tuple,
@@ -28,6 +30,49 @@ from typing import (Callable, Generic, List, Optional, Sequence, Tuple,
 import numpy as np
 
 G = TypeVar("G")
+
+_log = logging.getLogger(__name__)
+
+_ENGINES = (None, "auto", "numpy", "jax", "object")
+
+# one warning per process when engine="jax" silently degrades (requested
+# in a jax-less env, or on a problem without SoA operators)
+_JAX_FALLBACK_WARNED = False
+
+
+def jax_engine_unavailable_reason() -> Optional[str]:
+    """Why the JAX engine cannot run here, or None if it can.
+
+    ``REPRO_DISABLE_JAX_ENGINE=1`` is the escape hatch for processes that
+    must stay jax-free (e.g. a parent that will later fork a process pool
+    — see ``SearchSession._fork_safe``): with it set, ``engine="jax"``
+    degrades to the NumPy SoA path instead of importing jax.
+    """
+    if os.environ.get("REPRO_DISABLE_JAX_ENGINE"):
+        return "REPRO_DISABLE_JAX_ENGINE is set"
+    try:
+        import jax  # noqa: F401  (deliberate lazy probe)
+    except Exception as exc:  # pragma: no cover - env without jax
+        return f"jax is unavailable ({type(exc).__name__}: {exc})"
+    return None
+
+
+def _warn_jax_fallback(reason: str) -> None:
+    global _JAX_FALLBACK_WARNED
+    if not _JAX_FALLBACK_WARNED:
+        _JAX_FALLBACK_WARNED = True
+        _log.warning("engine='jax' requested but %s; "
+                     "falling back to the NumPy SoA engine", reason)
+
+
+def resolved_engine_name(cfg: "EvoConfig") -> str:
+    """The engine ``evolve`` will actually use for ``cfg`` — provenance
+    for reports/registry records (``"jax"`` only when it can really run)."""
+    if cfg.engine == "jax" and jax_engine_unavailable_reason() is None:
+        return "jax"
+    if cfg.engine == "object":
+        return "object"
+    return "numpy"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +84,33 @@ class SoaHandle:
     space: object                    # GenomeSpace-compatible SoA operators
     batch_model: object              # has fitness_matrix([B, L, 3])
     use_max_model: bool = False
+
+    def jax_ops(self):
+        """The compiled-engine operators for this handle, or ``None``
+        when the JAX engine cannot run (jax missing or disabled).
+
+        Built lazily — importing ``jax_evolve`` pulls in jax, which must
+        never happen on the jax-free fast path — and cached on the batch
+        model, so repeated ``evolve(engine="jax")`` calls reuse the jit
+        caches (the ops object also keeps the space alive, making the
+        ``id``-keyed cache entry safe).
+        """
+        if jax_engine_unavailable_reason() is not None:
+            return None
+        cache = getattr(self.batch_model, "_jax_ops_cache", None)
+        if cache is None:
+            cache = {}
+            try:
+                self.batch_model._jax_ops_cache = cache
+            except AttributeError:  # exotic batch models without __dict__
+                pass
+        key = (id(self.space), self.use_max_model)
+        ops = cache.get(key)
+        if ops is None:
+            from .jax_evolve import JaxEngineOps
+            ops = cache[key] = JaxEngineOps(self.space, self.batch_model,
+                                            self.use_max_model)
+        return ops
 
 
 @dataclasses.dataclass
@@ -52,6 +124,14 @@ class EvoConfig:
     seed: int = 0
     time_budget_s: Optional[float] = None
     max_evals: Optional[int] = None
+    # engine selection: None/"auto" picks the fastest always-equivalent
+    # path (NumPy SoA when the problem provides it), "numpy" forces SoA,
+    # "object" forces the object oracle, "jax" opts into the compiled
+    # engine (falls back to SoA with one logged warning if jax is
+    # missing).  Lives on the config so it pickles through the tuner's
+    # process pool and the triage probe inherits it (dataclasses.replace).
+    engine: Optional[str] = None
+    chains: int = 1                  # JAX engine: vmapped parallel chains
 
 
 @dataclasses.dataclass
@@ -125,20 +205,41 @@ class Problem(Generic[G]):
 
 def evolve(problem: Problem[G], cfg: EvoConfig,
            seeds: Sequence[G] = (),
-           stop_fn: Optional[Callable[[int, float, G], bool]] = None
-           ) -> EvoResult[G]:
+           stop_fn: Optional[Callable[[int, float, G], bool]] = None,
+           engine: Optional[str] = None,
+           chains: Optional[int] = None) -> EvoResult[G]:
     """Run the evolutionary search.
 
     ``stop_fn(epoch, best_fitness, best_genome)`` is polled once per epoch;
     returning True aborts the search (used by the sweep orchestrator to cut
     off designs dominated by the incumbent across-design best).
 
-    Problems whose ``soa_ops()`` returns a :class:`SoaHandle` run through
-    the structure-of-arrays engine (:func:`_evolve_soa`); the object path
-    below is the bit-equality oracle for it.
+    Engine selection (``engine`` argument overrides ``cfg.engine``):
+    problems whose ``soa_ops()`` returns a :class:`SoaHandle` run through
+    the structure-of-arrays engine (:func:`_evolve_soa`) by default; the
+    object path below is the bit-equality oracle for it.  ``"jax"`` opts
+    into the compiled engine (``jax_evolve``) with ``chains`` vmapped
+    island populations; when jax is unavailable — or the problem has no
+    SoA operators — it degrades to the best available path with a single
+    logged warning instead of raising, so a sweep config that sets
+    ``engine="jax"`` still runs everywhere (including jax-free
+    subprocesses, via ``REPRO_DISABLE_JAX_ENGINE``).
     """
+    requested = engine if engine is not None else cfg.engine
+    if requested not in _ENGINES:
+        raise ValueError(f"unknown engine {requested!r}; expected one of "
+                         f"{[e for e in _ENGINES if e]!r} (or None)")
     handle = problem.soa_ops() if hasattr(problem, "soa_ops") else None
-    if handle is not None:
+    if requested == "jax":
+        ops = handle.jax_ops() if handle is not None else None
+        if ops is not None:
+            from .jax_evolve import evolve_jax
+            n_chains = chains if chains is not None else cfg.chains
+            return evolve_jax(ops, cfg, seeds, stop_fn,
+                              chains=max(1, n_chains))
+        _warn_jax_fallback(jax_engine_unavailable_reason()
+                           or "the problem has no SoA operators")
+    if handle is not None and requested != "object":
         return _evolve_soa(handle, cfg, seeds, stop_fn)
     rng = random.Random(cfg.seed)
     t0 = time.perf_counter()

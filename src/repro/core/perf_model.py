@@ -300,7 +300,8 @@ class BatchEvaluation:
     lut: np.ndarray                # i8
     feasible: np.ndarray           # bool
     fitness: np.ndarray            # f8
-    off_chip_bytes: np.ndarray     # i8
+    off_chip_bytes: np.ndarray     # f8 (exact below 2**53; float64 so the
+    #   events x tile-bytes product cannot wrap int64 at 4096^3 scale)
 
 
 class BatchPerformanceModel:
@@ -524,13 +525,18 @@ class BatchPerformanceModel:
         dma_total = off_chip = None
         if need_events:
             dma_total = np.zeros(B)
-            off_chip = np.zeros(B, dtype=np.int64)
+            off_chip = np.zeros(B)
             for ai, a in enumerate(arrays):
                 load, store = events[ai]
                 ev = load + store
                 dma_total += ev * xfer[ai]
                 if full:
-                    off_chip += ev * tb[ai]
+                    # promote to float64 *before* the product: at 4096^3
+                    # scale events (~7e10) x tile bytes (~7e7) overflows
+                    # int64 once a few arrays accumulate.  Below 2**53 the
+                    # float64 sum is still exact, so the scalar-oracle
+                    # ``==`` contract holds for every realistic workload.
+                    off_chip += ev.astype(np.float64) * tb[ai]
 
         # resources
         dsp, total_bram, lut = self._resources_matrix(n1, n2, t1, tb)
@@ -587,10 +593,11 @@ class BatchPerformanceModel:
         arrays = self._arrays
         tb = [self._tile_bytes(a, t1) for a in arrays]
         prefix = self._prefix_products(n0)
-        off_chip = np.zeros(n0.shape[0], dtype=np.int64)
+        off_chip = np.zeros(n0.shape[0])
         for ai, a in enumerate(arrays):
             load, store = self._events(a, n0, prefix)
-            off_chip += (load + store) * tb[ai]
+            # float64 before the product — same overflow guard as _metrics
+            off_chip += (load + store).astype(np.float64) * tb[ai]
         dsp, total_bram, lut = self._resources_matrix(n1, n2, t1, tb)
         return dsp, total_bram, lut, off_chip
 

@@ -62,6 +62,8 @@ class TuneReport:
     workload: str
     results: List[DesignResult]
     from_cache: bool = False       # served by the design registry, 0 evals
+    engine: str = "numpy"          # evaluator provenance ("numpy"|"jax"|
+    #                                "object") — stratifies registry records
 
     @property
     def best(self) -> DesignResult:

@@ -29,7 +29,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from .fingerprint import Fingerprint
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 DEFAULT_ROOT_ENV = "REPRO_REGISTRY_DIR"
 
@@ -53,7 +53,16 @@ def _migrate_v1(rec: Dict) -> Dict:
     return rec
 
 
-_MIGRATIONS: Dict[int, Callable[[Dict], Dict]] = {1: _migrate_v1}
+def _migrate_v2(rec: Dict) -> Dict:
+    # v2 records predate evaluator provenance; everything recorded before
+    # the compiled engine existed came from the NumPy evaluation path.
+    rec.setdefault("engine", "numpy")
+    rec["schema_version"] = 3
+    return rec
+
+
+_MIGRATIONS: Dict[int, Callable[[Dict], Dict]] = {1: _migrate_v1,
+                                                  2: _migrate_v2}
 
 
 @dataclasses.dataclass
@@ -74,6 +83,9 @@ class Record:
     #   records without it fall back to pareto)
     evals: int = 0
     seconds: float = 0.0
+    engine: str = "numpy"          # evaluator provenance ("numpy"|"jax"|
+    #                                "object"); lets measured-vs-predicted
+    #                                analysis stratify by evaluator
     created_at: float = 0.0
     updated_at: float = 0.0
     hits: int = 0

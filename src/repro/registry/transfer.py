@@ -81,6 +81,7 @@ def record_from_report(fp: Fingerprint, wl: Workload, hw: HardwareProfile,
         sweep=[entry_from_result(r) for r in report.results],
         evals=sum(r.evo.evals for r in report.results),
         seconds=sum(r.seconds for r in report.results),
+        engine=getattr(report, "engine", "numpy"),
     )
 
 
@@ -133,7 +134,8 @@ def report_from_record(rec: Record, wl: Workload, hw: HardwareProfile):
     from repro.core.tuner import TuneReport
     entries = rec.sweep or rec.pareto or [rec.best]
     results = [result_from_entry(e, wl, hw) for e in entries]
-    return TuneReport(workload=wl.name, results=results, from_cache=True)
+    return TuneReport(workload=wl.name, results=results, from_cache=True,
+                      engine=getattr(rec, "engine", "numpy"))
 
 
 # ------------------------------------------------------------------ #

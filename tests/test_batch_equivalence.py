@@ -8,6 +8,7 @@ end-to-end: ``evolve`` with a fixed seed returns the identical best genome
 through the scalar and the batched evaluation paths.
 """
 
+import dataclasses
 import random
 
 import numpy as np
@@ -213,6 +214,264 @@ def test_tpu_autotune_identical_through_batch_path():
     assert a.best == b.best
     assert a.best_fitness == b.best_fitness
     assert a.evals == b.evals
+
+
+# ---------------------------------------------------------------------- #
+# JAX compiled engine vs the NumPy SoA oracle
+# ---------------------------------------------------------------------- #
+def _jax():
+    return pytest.importorskip("jax")
+
+
+def _soa_setup(wl, df, opts):
+    divisors_only = opts.get("divisors_only", False)
+    perm = pruned_permutations(wl)[0]
+    desc = build_descriptor(wl, df, perm)
+    model = PerformanceModel(desc, U250)
+    batch = BatchPerformanceModel(desc, U250)
+    space = GenomeSpace(wl, df, divisors_only=divisors_only)
+    return model, batch, space
+
+
+@pytest.mark.parametrize("tag,wl,df,opts", _SOA_CASES,
+                         ids=[c[0] for c in _SOA_CASES])
+def test_jax_fitness_matrix_matches_numpy(tag, wl, df, opts):
+    """The jitted fitness pipeline reproduces the NumPy matrix evaluator
+    (itself bit-pinned to the scalar oracle) within the documented
+    rtol=1e-12 on random populations — both latency models."""
+    _jax()
+    from repro.core.jax_model import JaxBatchModel
+    import random as _random
+    _, batch, space = _soa_setup(wl, df, opts)
+    jm = JaxBatchModel(batch)
+    mat = space.sample_matrix(_random.Random(5), 256)
+    for use_max in (False, True):
+        ref = batch.fitness_matrix(mat, use_max_model=use_max)
+        got = jm.fitness_matrix(mat, use_max_model=use_max)
+        assert np.all(np.isfinite(got))
+        np.testing.assert_allclose(got, ref, rtol=1e-12, atol=0.0)
+
+
+@pytest.mark.parametrize("tag,wl,df,opts", _SOA_CASES,
+                         ids=[c[0] for c in _SOA_CASES])
+def test_jax_legalize_and_sample_match_numpy(tag, wl, df, opts):
+    """The compiled legalizer is bit-identical to
+    ``GenomeSpace.legalize_matrix`` on arbitrary raw level matrices, and
+    compiled sampling emits only fixed points of the legalizer."""
+    jax = _jax()
+    from jax.experimental import enable_x64
+    from repro.core.jax_evolve import JaxEngineOps
+    _, batch, space = _soa_setup(wl, df, opts)
+    ops = JaxEngineOps(space, batch)
+    rng = np.random.default_rng(11)
+    maxb = max(l.bound for l in wl.loops)
+    raw = rng.integers(-4, 3 * maxb, size=(200, ops.L, 3), dtype=np.int64)
+    # mutated-but-legal rows: the domain legalization actually sees
+    legal = space.sample_matrix(random.Random(3), 100)
+    raw[:100] = legal
+    raw[:50, :, 1] *= rng.integers(1, 5, size=(50, ops.L), dtype=np.int64)
+    with enable_x64():
+        got = np.asarray(jax.jit(ops._legalize)(raw))
+        sampled = np.asarray(jax.jit(
+            lambda k: ops._sample(k, 128))(jax.random.PRNGKey(0)))
+    np.testing.assert_array_equal(got, space.legalize_matrix(raw.copy()))
+    np.testing.assert_array_equal(sampled, space.legalize_matrix(
+        sampled.copy()))
+
+
+_REF_SEARCHES = [
+    ("mm-1024", mm_1024(), ("i", "j"), {},
+     EvoConfig(epochs=200, population=128, seed=0)),
+    ("conv-strided", conv2d(16, 16, 14, 14, 3, 3, stride=2), ("i",), {},
+     EvoConfig(epochs=200, population=128, seed=0)),
+    ("mm-divisors", mm_1024(), ("i", "j"), {"divisors_only": True},
+     EvoConfig(epochs=120, population=128, seed=0)),
+]
+
+
+@pytest.mark.parametrize("tag,wl,df,opts,cfg", _REF_SEARCHES,
+                         ids=[c[0] for c in _REF_SEARCHES])
+def test_jax_engine_reference_search_parity(tag, wl, df, opts, cfg):
+    """Fixed-seed parity on the reference searches: the compiled engine
+    and the NumPy SoA oracle must agree on the best design.
+
+    The two engines draw different (documented) RNG streams, so raw
+    single-run winners differ; the reference search is the *cross-seeded
+    fixed point* — each round both engines restart seeded with the best
+    genome found so far, and because both keep a seeded incumbent unless
+    strictly improved, they agree exactly once neither can improve it.
+    Convergence within a few rounds is part of the assertion: a jax
+    engine that searched a different landscape would never settle."""
+    _jax()
+    model, _, space = _soa_setup(wl, df, opts)
+    prob = TilingProblem(space, model)
+    seeds = []
+    for _ in range(6):
+        rn = evolve(prob, cfg, seeds=seeds, engine="numpy")
+        rj = evolve(prob, cfg, seeds=seeds, engine="jax")
+        if rn.best.key() == rj.best.key():
+            break
+        best = rn if rn.best_fitness >= rj.best_fitness else rj
+        seeds = [best.best]
+    else:
+        pytest.fail(f"{tag}: engines never agreed on a best genome; "
+                    f"numpy={rn.best_fitness} jax={rj.best_fitness}")
+    # same genome, and the single scalar oracle sees one design: latency
+    # parity at rtol=0
+    assert rn.best.key() == rj.best.key()
+    assert model.latency(rn.best).cycles == model.latency(rj.best).cycles
+    # each engine reported its own evaluation of the same genome
+    np.testing.assert_allclose(rj.best_fitness, rn.best_fitness,
+                               rtol=1e-12, atol=0.0)
+
+
+def test_jax_engine_deterministic_chains_and_accounting():
+    _jax()
+    wl = matmul(256, 256, 256)
+    model, _, space = _soa_setup(wl, ("i", "j"), {})
+    prob = TilingProblem(space, model)
+    cfg = EvoConfig(epochs=10, population=32, seed=4)
+    a = evolve(prob, cfg, engine="jax")
+    b = evolve(prob, cfg, engine="jax")
+    assert a.best.key() == b.best.key()
+    assert a.best_fitness == b.best_fitness
+    # no dedup in the compiled loop: evals is exactly chains*B*(epochs+1)
+    assert a.evals == cfg.population * (cfg.epochs + 1)
+    assert len(a.trace) == cfg.epochs + 1
+    c = evolve(prob, cfg, engine="jax", chains=4)
+    c2 = evolve(prob, cfg, engine="jax", chains=4)
+    assert c.best.key() == c2.best.key()
+    assert c.evals == 4 * cfg.population * (cfg.epochs + 1)
+    # islands only add candidates: the multi-chain best cannot be worse
+    assert c.best_fitness >= a.best_fitness
+    # max_evals budget clips epochs on the eval grid
+    d = evolve(prob, dataclasses.replace(cfg, max_evals=5 * 32),
+               engine="jax")
+    assert d.evals == 5 * 32
+
+
+def test_jax_engine_seeds_and_stop_fn():
+    _jax()
+    wl = matmul(256, 256, 256)
+    model, _, space = _soa_setup(wl, ("i", "j"), {})
+    prob = TilingProblem(space, model)
+    strong = evolve(prob, EvoConfig(epochs=40, population=64, seed=9)).best
+    cfg = EvoConfig(epochs=8, population=16, seed=1)
+    res = evolve(prob, cfg, seeds=[strong], engine="jax")
+    # elitism: a seeded incumbent is never lost
+    assert res.best_fitness >= model.fitness(strong)
+
+    seen = []
+
+    def stop(epoch, best_f, best_g):
+        seen.append((epoch, best_f, best_g.key()))
+        return epoch >= 3
+
+    res = evolve(prob, cfg, stop_fn=stop, engine="jax")
+    assert res.aborted
+    assert [e for e, _, _ in seen] == [0, 1, 2, 3]
+    # the polled best is a real genome at the reported fitness
+    _, bf, key = seen[-1]
+    assert bf <= res.best_fitness
+
+
+def test_jax_engine_fallback_is_numpy_with_one_warning(monkeypatch, caplog):
+    """Satellite: engine='jax' in a process that must stay jax-free
+    degrades to the NumPy SoA engine — identical result, one warning."""
+    import logging
+    from repro.core import evolutionary as evo_mod
+    wl = matmul(130, 70, 50)
+    model, _, space = _soa_setup(wl, ("j",), {})
+    prob = TilingProblem(space, model)
+    cfg = EvoConfig(epochs=8, population=16, seed=2, engine="jax")
+    monkeypatch.setenv("REPRO_DISABLE_JAX_ENGINE", "1")
+    monkeypatch.setattr(evo_mod, "_JAX_FALLBACK_WARNED", False)
+    assert evo_mod.jax_engine_unavailable_reason() is not None
+    from repro.core import resolved_engine_name
+    assert resolved_engine_name(cfg) == "numpy"
+    with caplog.at_level(logging.WARNING, logger="repro.core.evolutionary"):
+        got = evolve(prob, cfg)
+        again = evolve(prob, cfg)
+    ref = evolve(prob, cfg, engine="numpy")
+    assert got.best.key() == again.best.key() == ref.best.key()
+    assert got.best_fitness == ref.best_fitness
+    warnings = [r for r in caplog.records if "falling back" in r.message]
+    assert len(warnings) == 1     # once per process, not per call
+
+
+def test_jax_engine_on_object_problem_falls_back(monkeypatch):
+    """engine='jax' on a problem without SoA operators degrades to the
+    object path instead of raising."""
+    _jax()
+    from repro.core import evolutionary as evo_mod
+    monkeypatch.setattr(evo_mod, "_JAX_FALLBACK_WARNED", False)
+    wl = matmul(64, 64, 64)
+    model, _, space = _soa_setup(wl, ("i", "k"), {})
+    cfg = EvoConfig(epochs=6, population=16, seed=0)
+    obj = evolve(TilingProblem(space, model, soa=False), cfg,
+                 engine="object")
+    via_jax = evolve(TilingProblem(space, model, soa=False), cfg,
+                     engine="jax")
+    assert via_jax.best.key() == obj.best.key()
+    assert via_jax.evals == obj.evals
+
+
+def test_no_int64_overflow_at_4096_scale():
+    """Satellite: 4096^3 workloads push the events x tile-bytes traffic
+    product past int64 — the batch path must promote to float64 before
+    the multiply (exact below 2**53, never wrapping negative), pinned
+    against the scalar oracle's arbitrary-precision Python ints."""
+    wl = matmul(4096, 4096, 4096)
+    perm = pruned_permutations(wl)[0]
+    desc = build_descriptor(wl, ("i", "j"), perm)
+    scalar = PerformanceModel(desc, U250)
+    batch = BatchPerformanceModel(desc, U250)
+    space = GenomeSpace(wl, ("i", "j"))
+    rng = random.Random(1)
+    genomes = [space.sample(rng) for _ in range(64)]
+    # adversarial rows: unit tiles maximize tile counts (and the traffic
+    # product ~ 4096^3 * bytes, far beyond int64)
+    from repro.core import Genome
+    genomes.append(space.legalize(
+        Genome({l.name: (l.bound, 1, 1) for l in wl.loops})))
+    genomes.append(space.legalize(
+        Genome({l.name: (1, l.bound, 1) for l in wl.loops})))
+    for use_max in (False, True):
+        ev = batch.evaluate(genomes, use_max_model=use_max)
+        assert np.all(np.isfinite(ev.fitness))
+        assert np.all(ev.off_chip_bytes >= 0), "int64 wraparound"
+        assert np.all(ev.latency_cycles > 0)
+    ev = batch.evaluate(genomes)
+    for i, g in enumerate(genomes):
+        oracle = scalar.off_chip_bytes(g)       # exact Python int
+        assert oracle >= 0
+        np.testing.assert_allclose(ev.off_chip_bytes[i], float(oracle),
+                                   rtol=1e-12, atol=0.0)
+        if oracle < 2 ** 53:
+            assert ev.off_chip_bytes[i] == oracle
+        np.testing.assert_allclose(ev.fitness[i], scalar.fitness(g),
+                                   rtol=1e-12, atol=0.0)
+
+
+def test_jax_fitness_matches_at_4096_scale():
+    """The jax port applies the same promote-before-multiply policy."""
+    _jax()
+    from repro.core.jax_model import JaxBatchModel
+    wl = matmul(4096, 4096, 4096)
+    perm = pruned_permutations(wl)[0]
+    desc = build_descriptor(wl, ("i", "j"), perm)
+    batch = BatchPerformanceModel(desc, U250)
+    space = GenomeSpace(wl, ("i", "j"))
+    mat = space.sample_matrix(random.Random(8), 128)
+    mat[0, :, :] = 1
+    mat[0, :, 0] = [l.bound for l in wl.loops]  # unit tiles, max tiles
+    mat = space.legalize_matrix(mat)
+    jm = JaxBatchModel(batch)
+    for use_max in (False, True):
+        ref = batch.fitness_matrix(mat, use_max_model=use_max)
+        got = jm.fitness_matrix(mat, use_max_model=use_max)
+        assert np.all(np.isfinite(got))
+        np.testing.assert_allclose(got, ref, rtol=1e-12, atol=0.0)
 
 
 def test_evolve_identical_through_batched_legalization():

@@ -134,6 +134,50 @@ def test_lr_schedule_bounds(step):
         assert abs(lr - cfg.lr * cfg.min_lr_frac) < 1e-8
 
 
+_JAX_LEG_CACHE = {}
+
+
+def _jax_legalizer(div_only: bool):
+    """(wl, space, ops, jitted legalize) for a fixed workload — cached so
+    hypothesis examples share one XLA compilation per subspace."""
+    import jax
+    from repro.core import BatchPerformanceModel, build_descriptor
+    from repro.core.jax_evolve import JaxEngineOps
+    hit = _JAX_LEG_CACHE.get(div_only)
+    if hit is None:
+        wl, space = _space(96, 48, 32, divisors_only=div_only)
+        desc = build_descriptor(wl, ("i", "j"), pruned_permutations(wl)[0])
+        ops = JaxEngineOps(space, BatchPerformanceModel(desc, U250))
+        hit = _JAX_LEG_CACHE[div_only] = (wl, space, ops,
+                                          jax.jit(ops._legalize))
+    return hit
+
+
+@given(st.integers(0, 2 ** 31), st.booleans())
+@SET
+def test_jax_legalize_never_out_of_space(seed, div_only):
+    """Property: the jitted legalizer maps *any* int64 level matrix —
+    negative, zero, far over bound — to genomes satisfying every design
+    space invariant, and agrees bit-for-bit with the NumPy legalizer it
+    ports (so the compiled search can never walk out of the space)."""
+    pytest.importorskip("jax")
+    import numpy as np
+    from jax.experimental import enable_x64
+    from repro.core.design_space import genome_from_row
+    wl, space, ops, leg = _jax_legalizer(div_only)
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(-8, 4 * 96, size=(8, ops.L, 3)).astype(np.int64)
+    with enable_x64():
+        out = np.asarray(leg(raw))
+    for row in out:
+        g = genome_from_row(row, ops.names)
+        _assert_legal(wl, space, g)
+        if div_only:
+            for l in wl.loops:
+                assert l.bound % g.t1(l.name) == 0
+    np.testing.assert_array_equal(out, space.legalize_matrix(raw.copy()))
+
+
 @given(st.integers(8, 64), st.integers(4, 30), st.integers(0, 2 ** 31),
        st.booleans())
 @SET

@@ -96,6 +96,38 @@ def test_old_schema_record_is_migrated(store):
     assert got is not None
     assert got.schema_version == SCHEMA_VERSION
     assert got.pareto == [] and got.hits == 0
+    assert got.engine == "numpy"                    # v3 provenance default
+
+
+def test_v2_record_migrates_engine_default(store):
+    """v2 records (pre compiled-engine) gain engine='numpy' on read, and
+    the provenance round-trips from a report through the record."""
+    rec = make_record()
+    payload = rec.to_json()
+    payload["schema_version"] = 2
+    del payload["engine"]                           # v2 predates the field
+    path = store._path(rec.fingerprint)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    got = store.get(rec.fingerprint)
+    assert got is not None
+    assert got.schema_version == SCHEMA_VERSION
+    assert got.engine == "numpy"
+
+
+def test_engine_provenance_round_trips_through_registry(store):
+    """A sweep's evaluator provenance lands in the record and survives
+    the exact-hit reconstruction back into a report."""
+    wl = matmul(64, 64, 64)
+    sess = tiny_session(wl, store)
+    report = sess.run()
+    assert report.engine == "numpy"                 # default engine
+    fp = workload_fingerprint(wl, U250)
+    rec = store.get(fp)
+    assert rec is not None and rec.engine == "numpy"
+    cached = report_from_record(rec, wl, U250)
+    assert cached.from_cache and cached.engine == "numpy"
 
 
 def test_future_schema_record_is_quarantined(store):
