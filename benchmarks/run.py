@@ -21,7 +21,14 @@ def main() -> None:
                     help="comma-separated bench names (substring match)")
     ap.add_argument("--skip-slow", action="store_true",
                     help="skip the multi-minute network studies")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="stream spans/counters to this .trace.jsonl "
+                         "(render with python -m repro.obs to-perfetto)")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro import obs
+        obs.configure(args.trace, process_name="benchmarks")
 
     # module:function, imported lazily per selected bench — a filtered
     # run must not import the others' dependencies (e.g. the TPU benches
@@ -32,6 +39,7 @@ def main() -> None:
         ("registry_warmstart", "registry_warmstart:bench_registry_warmstart"),
         ("serving_throughput", "serving_throughput:bench_serving_throughput"),
         ("network_dse", "network_dse:bench_network_dse"),
+        ("obs_trace", "trace_demo:bench_obs_trace"),
         ("table2", "paper_mm:bench_table2"),
         ("fig1_fig15", "paper_mm:bench_fig1_fig15"),
         ("table3", "paper_mm:bench_table3"),
@@ -46,6 +54,17 @@ def main() -> None:
     # network_dse runs the whole-graph studies: multi-minute, like the
     # fig11_13_14 network sweeps (its CI entry is the --smoke CLI)
     slow = {"fig11_13_14_table7", "fig7_8_9", "network_dse"}
+
+    if args.only:
+        # every comma token must select at least one bench — a typo'd
+        # --only would otherwise "pass" by silently running nothing
+        known = [name for name, _ in benches]
+        bad = [tok for tok in args.only.split(",")
+               if not any(tok in name for name in known)]
+        if bad:
+            print(f"unknown bench name(s): {', '.join(bad)}\n"
+                  f"valid names: {', '.join(known)}", file=sys.stderr)
+            raise SystemExit(2)
 
     print("name,us_per_call,derived")
     failures = []

@@ -1,0 +1,108 @@
+"""Traced demo runs: the observability spine exercised end-to-end.
+
+Two real workloads run with tracing *enabled* (``--trace`` semantics):
+
+  * the full pruned-design-space mm_1024 sweep through the process-pool
+    ``SearchSession`` — per-design spans, triage/budget/incumbent
+    instants and per-generation convergence counters from every worker
+    process land in one ``sweep.trace.jsonl``;
+  * a short continuous-batching serving run (countdown stub model) —
+    slot-occupancy/queue-depth counters, prefill-chunk and decode-tick
+    spans, admit/finish instants in ``serving.trace.jsonl``.
+
+Both streams are converted to Chrome trace-event JSON
+(``*.perfetto.json``) that https://ui.perfetto.dev opens directly; CI
+uploads all four files as artifacts.  The gated overhead policy lives in
+``search_speed.py`` — this bench documents what traced-on looks like,
+it gates only trace integrity (events parse, spans present).
+
+Run: ``PYTHONPATH=src python -m benchmarks.run --only obs_trace``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import OUT_DIR, emit, save_json
+
+
+def _convert(trace_path: str):
+    """JSONL -> (events, perfetto event count); writes the .perfetto.json
+    sibling next to the trace."""
+    from repro import obs
+    events, corrupt = obs.load_events(trace_path)
+    doc = obs.to_perfetto(events)
+    out = trace_path.rsplit(".trace.jsonl", 1)[0] + ".perfetto.json"
+    with open(out, "w") as f:
+        json.dump(doc, f)
+    return events, corrupt, doc
+
+
+def bench_obs_trace() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    from repro import obs
+    prior = obs.get_tracer().path     # benchmarks/run.py --trace, if any
+
+    # -- traced sweep: run first, while the process image may still be
+    # jax-free (fork pool); serving below necessarily imports jax -------
+    from repro.core import EvoConfig, SearchSession, SessionConfig, mm_1024
+    sweep_trace = os.path.join(OUT_DIR, "sweep.trace.jsonl")
+    if os.path.exists(sweep_trace):
+        os.unlink(sweep_trace)        # configure() appends
+    obs.configure(sweep_trace, process_name="sweep")
+    rep = SearchSession(
+        mm_1024(), cfg=EvoConfig(epochs=10, population=32, seed=0),
+        session=SessionConfig(executor="process", early_abort=True)).run()
+    obs.disable()
+    events, corrupt, doc = _convert(sweep_trace)
+    summary = obs.summarize(events)
+    assert corrupt == 0, f"{corrupt} corrupt lines in {sweep_trace}"
+    assert summary["spans"].get("design", {}).get("count") \
+        == len(rep.results)
+    emit("obs_trace_sweep", 0.0,
+         f"{len(rep.results)} designs -> {len(events)} events "
+         f"({len(summary['processes'])} processes, "
+         f"{len(doc['traceEvents'])} perfetto)")
+
+    # -- traced continuous serving run ----------------------------------
+    from repro.serve import ServeConfig, make_engine
+    from repro.serve.sim import countdown_model, poisson_requests
+    serve_trace = os.path.join(OUT_DIR, "serving.trace.jsonl")
+    if os.path.exists(serve_trace):
+        os.unlink(serve_trace)
+    obs.configure(serve_trace, process_name="serve")
+    model = countdown_model(64, work_dim=128)
+    params = model.init(None)
+    reqs = poisson_requests(12, rate_rps=300.0, vocab_size=64,
+                            prompt_len=range(2, 8), max_new_tokens=24,
+                            seed=0)
+    eng = make_engine("continuous", model, params,
+                      ServeConfig(max_batch=4, max_seq=128, eos_token=0,
+                                  prefill_chunk=8))
+    outs, stats = eng.serve(reqs)
+    obs.disable()
+    events, corrupt, doc = _convert(serve_trace)
+    summary = obs.summarize(events)
+    assert corrupt == 0, f"{corrupt} corrupt lines in {serve_trace}"
+    assert summary["instants"].get("serve.finish") == len(stats.requests)
+    assert "serve.decode_tick" in summary["spans"]
+    emit("obs_trace_serving", 0.0,
+         f"{len(stats.requests)} requests, {stats.decode_steps} ticks -> "
+         f"{len(events)} events ({len(doc['traceEvents'])} perfetto)")
+
+    save_json("obs_trace", {
+        "sweep": {"trace": sweep_trace, "designs": len(rep.results),
+                  "best_latency_cycles": rep.best.latency_cycles,
+                  "summary": obs.summarize(obs.load_events(sweep_trace)[0])},
+        "serving": {"trace": serve_trace, "stats": stats.to_dict(),
+                    "summary": summary},
+    })
+
+    if prior:                         # hand the global tracer back
+        obs.configure(prior, process_name="benchmarks")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    bench_obs_trace()

@@ -105,6 +105,7 @@ def main() -> None:
 
     network_demo(store)
     serving_demo()
+    tracing_demo()
 
 
 def network_demo(store: RegistryStore) -> None:
@@ -179,6 +180,37 @@ def serving_demo() -> None:
         eng = make_engine(scheduler, model, params, cfg)
         _, stats = eng.serve([r for r in requests])
         print(f"  {stats.summary()}")
+
+
+def tracing_demo() -> None:
+    """Observability spine (DESIGN.md §12): trace a sweep, render it.
+
+    Every CLI takes ``--trace PATH`` (launch/serve.py, python -m
+    repro.network, python -m benchmarks.run); here the same thing is
+    done in-process.  The JSONL stream renders two ways:
+
+        python -m repro.obs summarize   /tmp/quickstart.trace.jsonl
+        python -m repro.obs to-perfetto /tmp/quickstart.trace.jsonl
+        # -> /tmp/quickstart.perfetto.json, open at ui.perfetto.dev
+    """
+    from repro import obs
+    from repro.core import mm_validation
+
+    path = "/tmp/quickstart.trace.jsonl"
+    if os.path.exists(path):
+        os.unlink(path)                  # the sink appends
+    obs.configure(path, process_name="quickstart")
+    rep = SearchSession(mm_validation(),
+                        cfg=EvoConfig(epochs=6, population=16, seed=0),
+                        session=SessionConfig(executor="serial")).run()
+    obs.disable()
+    events, corrupt = obs.load_events(path)
+    s = obs.summarize(events)
+    print(f"\ntracing: {len(rep.results)} designs -> {len(events)} events "
+          f"({corrupt} corrupt) in {path}")
+    print(f"  spans: " + ", ".join(
+        f"{k} x{v['count']}" for k, v in sorted(s["spans"].items())))
+    print(f"  render: python -m repro.obs to-perfetto {path}")
 
 
 # The process-pool engine uses the spawn context (fork is unsafe once jax's

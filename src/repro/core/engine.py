@@ -55,6 +55,7 @@ from .evolutionary import (EvoConfig, EvoResult, TraceEntry,
 from .hardware import HardwareProfile, U250
 from .perf_model import BatchPerformanceModel, PerformanceModel
 from .workloads import Workload
+from repro.obs import get_tracer
 
 Design = Tuple[Tuple[str, ...], Permutation]
 
@@ -135,11 +136,19 @@ _WORKER: Dict = {}
 
 
 def _pool_init(wl, hw, designs, use_mp_seed, divisors_only, incumbent,
-               abort_factor, probe_epochs, triage, triage_factor):
+               abort_factor, probe_epochs, triage, triage_factor,
+               trace_path=None):
     _WORKER.update(wl=wl, hw=hw, designs=designs, use_mp_seed=use_mp_seed,
                    divisors_only=divisors_only, incumbent=incumbent,
                    abort_factor=abort_factor, probe_epochs=probe_epochs,
                    triage=triage, triage_factor=triage_factor, built={})
+    # spawn workers start with the disabled tracer: re-attach them to the
+    # parent's JSONL sink (fork workers inherit the live tracer and skip
+    # this — reconfiguring would close descriptors they still share)
+    if trace_path is not None and not get_tracer().enabled:
+        from repro import obs
+        obs.configure(trace_path,
+                      process_name="sweep-worker-%d" % os.getpid())
 
 
 def _worker_built(i):
@@ -327,9 +336,14 @@ class SearchSession:
             if self._incumbent is None or \
                     res.latency_cycles < self._incumbent:
                 self._incumbent = res.latency_cycles
+                get_tracer().instant(
+                    "sweep.incumbent", cat="search",
+                    latency_cycles=res.latency_cycles,
+                    design=res.design.label())
 
     # -- time-budget ledger -------------------------------------------------
-    def _dispatch_cfg(self) -> Tuple[EvoConfig, Optional[float]]:
+    def _dispatch_cfg(self, design: int = -1
+                      ) -> Tuple[EvoConfig, Optional[float]]:
         """Per-design config at dispatch: an equal share of whatever
         budget is still unspent by the designs dispatched so far."""
         if self.time_budget_s is None:
@@ -338,9 +352,12 @@ class SearchSession:
         self._unassigned -= 1
         self._budget_left -= slice_s
         self.budget_log.append(slice_s)
+        get_tracer().instant("budget.slice", cat="search", design=design,
+                             slice_s=slice_s, left_s=self._budget_left)
         return dataclasses.replace(self.cfg, time_budget_s=slice_s), slice_s
 
-    def _refund(self, slice_s: Optional[float], used_s: float) -> None:
+    def _refund(self, slice_s: Optional[float], used_s: float,
+                design: int = -1) -> None:
         """Roll a design's unused seconds back into the pool.
 
         ``used_s`` is the design's *full* wall-clock (MP seeding and the
@@ -353,6 +370,9 @@ class SearchSession:
         """
         if slice_s is not None:
             self._budget_left += slice_s - used_s
+            get_tracer().instant("budget.refund", cat="search",
+                                 design=design, refund_s=slice_s - used_s,
+                                 left_s=self._budget_left)
 
     # -- execution ---------------------------------------------------------
     def _tune_index(self, i: int, cfg: EvoConfig):
@@ -376,9 +396,9 @@ class SearchSession:
     def _run_serial(self) -> List:
         out = []
         for i in range(len(self.designs)):
-            cfg, slice_s = self._dispatch_cfg()
+            cfg, slice_s = self._dispatch_cfg(design=i)
             res = self._tune_index(i, cfg)
-            self._refund(slice_s, res.seconds)
+            self._refund(slice_s, res.seconds, design=i)
             self._observe(res)
             out.append(res)
         return out
@@ -452,7 +472,8 @@ class SearchSession:
                               self.session.abort_factor,
                               self.session.probe_epochs,
                               self.session.triage,
-                              self.session.triage_factor))
+                              self.session.triage_factor,
+                              get_tracer().path))
         else:
             Executor = cf.ThreadPoolExecutor
 
@@ -464,7 +485,7 @@ class SearchSession:
             pending: Dict = {}
 
             def submit(i):
-                cfg, slice_s = self._dispatch_cfg()
+                cfg, slice_s = self._dispatch_cfg(design=i)
                 if use_procs:
                     seed_triples = tuple(
                         tuple(g.as_dict().items())
@@ -492,7 +513,7 @@ class SearchSession:
                     res = fut.result()
                     if use_procs:
                         res = self._result_from_payload(i, res)
-                    self._refund(slice_s, res.seconds)
+                    self._refund(slice_s, res.seconds, design=i)
                     self._observe(res)
                     results[i] = res
                     if next_i < n_designs:
@@ -509,31 +530,44 @@ class SearchSession:
         is recorded for future sessions.
         """
         from .tuner import TuneReport
+        tr = get_tracer()
         # fresh budget ledger per run (a session may be re-run)
         self._budget_left = self.time_budget_s
         self._unassigned = len(self.designs)
         self.budget_log = []
-        if self.registry is not None:
-            if not self.refresh:
-                cached = self._cached_report()
-                if cached is not None:
-                    self.report = cached
-                    return cached
-            if self.transfer:
-                self._load_transfer_seeds()
-        if self.session.executor == "serial":
-            results = self._run_serial()
-        elif self.session.executor in ("thread", "process"):
-            results = self._run_pool()
-        else:
-            raise ValueError(
-                f"unknown executor {self.session.executor!r}; "
-                "expected 'serial', 'thread' or 'process'")
-        self.report = TuneReport(workload=self.wl.name, results=results,
-                                 engine=resolved_engine_name(self.cfg))
-        if self.registry is not None:
-            self._record()
-        return self.report
+        with tr.span("sweep", cat="search", workload=self.wl.name,
+                     designs=len(self.designs),
+                     executor=self.session.executor,
+                     engine=resolved_engine_name(self.cfg)):
+            if self.registry is not None:
+                if not self.refresh:
+                    cached = self._cached_report()
+                    if cached is not None:
+                        tr.instant("registry.exact_hit", cat="registry",
+                                   workload=self.wl.name)
+                        self.report = cached
+                        return cached
+                    tr.instant("registry.miss", cat="registry",
+                               workload=self.wl.name)
+                if self.transfer:
+                    self._load_transfer_seeds()
+                    tr.instant(
+                        "registry.transfer_seeds", cat="registry",
+                        designs_seeded=len(self._seeds),
+                        genomes=sum(len(v) for v in self._seeds.values()))
+            if self.session.executor == "serial":
+                results = self._run_serial()
+            elif self.session.executor in ("thread", "process"):
+                results = self._run_pool()
+            else:
+                raise ValueError(
+                    f"unknown executor {self.session.executor!r}; "
+                    "expected 'serial', 'thread' or 'process'")
+            self.report = TuneReport(workload=self.wl.name, results=results,
+                                     engine=resolved_engine_name(self.cfg))
+            if self.registry is not None:
+                self._record()
+            return self.report
 
     # -- reporting ---------------------------------------------------------
     def pareto(self) -> List[ParetoPoint]:

@@ -29,6 +29,8 @@ from typing import (Callable, Generic, List, Optional, Sequence, Tuple,
 
 import numpy as np
 
+from repro.obs import get_tracer
+
 G = TypeVar("G")
 
 _log = logging.getLogger(__name__)
@@ -242,9 +244,11 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
     if handle is not None and requested != "object":
         return _evolve_soa(handle, cfg, seeds, stop_fn)
     rng = random.Random(cfg.seed)
+    tr = get_tracer()
     t0 = time.perf_counter()
     evals = 0
     cache = {}
+    last_fresh = [0]                   # dedup yield of the latest score()
 
     def score(pop: List[G]) -> List[Tuple[float, int, G]]:
         """Fitness-sorted (fitness, index, genome); batch-evaluates every
@@ -262,6 +266,7 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
             evals += len(fresh)
             for i, v in zip(fresh, vals):
                 cache[keys[i]] = float(v)
+        last_fresh[0] = len(fresh)
         return sorted(((cache[k], i, g)
                        for i, (g, k) in enumerate(zip(pop, keys))),
                       key=lambda t: -t[0])
@@ -269,6 +274,11 @@ def evolve(problem: Problem[G], cfg: EvoConfig,
     def record():
         dt = time.perf_counter() - t0
         trace.append(TraceEntry(evals, dt, best_f, evals / max(1e-12, dt)))
+        if tr.enabled:
+            tr.counter("evolve.gen", best=best_f,
+                       mean=sum(t[0] for t in scored) / len(scored),
+                       dedup_fresh=last_fresh[0], evals=evals,
+                       evals_per_sec=evals / max(1e-12, dt))
 
     pop: List[G] = list(seeds)[:cfg.population]
     while len(pop) < cfg.population:
@@ -350,9 +360,11 @@ def _evolve_soa(handle: SoaHandle, cfg: EvoConfig, seeds: Sequence,
     names = space.wl.loop_names
     L = len(names)
     rng = random.Random(cfg.seed)
+    tr = get_tracer()
     t0 = time.perf_counter()
     evals = 0
     cache: dict = {}
+    last_fresh = [0]                   # dedup yield of the latest score()
 
     def score(mat: np.ndarray):
         """(fitness [B], stable descending order [B]); evaluates rows not
@@ -374,6 +386,7 @@ def _evolve_soa(handle: SoaHandle, cfg: EvoConfig, seeds: Sequence,
             evals += len(fresh)
             for i, v in zip(fresh, vals):
                 cache[keys[i]] = float(v)
+        last_fresh[0] = len(fresh)
         fit = np.fromiter((cache[k] for k in keys), dtype=np.float64,
                           count=len(keys))
         return fit, np.argsort(-fit, kind="stable")
@@ -381,6 +394,10 @@ def _evolve_soa(handle: SoaHandle, cfg: EvoConfig, seeds: Sequence,
     def record():
         dt = time.perf_counter() - t0
         trace.append(TraceEntry(evals, dt, best_f, evals / max(1e-12, dt)))
+        if tr.enabled:
+            tr.counter("evolve.gen", best=best_f, mean=float(fit.mean()),
+                       dedup_fresh=last_fresh[0], evals=evals,
+                       evals_per_sec=evals / max(1e-12, dt))
 
     seed_rows = list(seeds)[:cfg.population]
     n_sample = cfg.population - len(seed_rows)

@@ -73,6 +73,7 @@ from .design_space import (_divisors_gt1, _divisors_t, _pow2_floor,
                            genomes_to_matrix)
 from .evolutionary import EvoConfig, EvoResult, TraceEntry
 from .jax_model import build_fitness_fn
+from repro.obs import get_tracer
 
 __all__ = ["JaxEngineOps", "evolve_jax", "simulated_annealing_jax"]
 
@@ -375,6 +376,11 @@ def evolve_jax(ops: JaxEngineOps, cfg: EvoConfig, seeds: Sequence = (),
     B = cfg.population
     P = max(1, min(cfg.parents, B))
     E = min(cfg.elites, B - 1) if B > 1 else 0
+    tr = get_tracer()
+    # compile-vs-run provenance: a cold ops cache means the first prep +
+    # first run dispatch pay the XLA compile (spans carry cold=True)
+    cold = ("evo", B, P, E, cfg.crossover_rate,
+            cfg.mutation_alpha) not in ops._compiled
     t0 = time.perf_counter()
 
     # deterministic eval accounting: every epoch evaluates K*B rows
@@ -400,7 +406,11 @@ def evolve_jax(ops: JaxEngineOps, cfg: EvoConfig, seeds: Sequence = (),
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed), K)
         seed_mat = (genomes_to_matrix(list(seeds)[:B], ops.names)
                     if seeds else np.zeros((0, ops.L, 3), dtype=_I8))
-        pop, fit, best_f, best_row = prep(keys, seed_mat)
+        with tr.span("evolve.jax.prep", cat="search", chains=K,
+                     population=B, cold=cold):
+            pop, fit, best_f, best_row = prep(keys, seed_mat)
+            if tr.enabled:          # sync only when timing the span
+                jax.block_until_ready(fit)
         evals = per_epoch
         trace: List[TraceEntry] = []
 
@@ -423,18 +433,23 @@ def evolve_jax(ops: JaxEngineOps, cfg: EvoConfig, seeds: Sequence = (),
                     aborted = True
                     break
             n = min(seg_len, epochs - epoch)
-            keys, pop, fit, best_f, best_row, hist = run(
-                keys, pop, fit, best_f, best_row, n)
-            # per-epoch trace from the scanned best-fitness history; the
-            # wall clock is only observable at segment boundaries, so all
-            # epochs of a segment share its end timestamp
-            hist = np.asarray(hist)                 # [K, n]
+            with tr.span("evolve.jax.run", cat="search", epochs=n,
+                         cold=cold and epoch == 0):
+                keys, pop, fit, best_f, best_row, hist = run(
+                    keys, pop, fit, best_f, best_row, n)
+                # per-epoch trace from the scanned best-fitness history;
+                # the wall clock is only observable at segment boundaries,
+                # so all epochs of a segment share its end timestamp
+                hist = np.asarray(hist)             # [K, n]
             dt = time.perf_counter() - t0
             for j in range(n):
                 evals += per_epoch
                 bf = float(hist[:, j].max())
                 trace.append(TraceEntry(evals, dt, bf,
                                         evals / max(1e-12, dt)))
+                if tr.enabled:
+                    tr.counter("evolve.gen", best=bf, evals=evals,
+                               evals_per_sec=evals / max(1e-12, dt))
             epoch += n
 
         k = int(jnp.argmax(best_f))

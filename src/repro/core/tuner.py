@@ -26,6 +26,7 @@ from .evolutionary import EvoConfig, EvoResult, TilingProblem, evolve
 from .hardware import HardwareProfile, U250
 from .perf_model import PerformanceModel
 from .workloads import Workload
+from repro.obs import get_tracer
 
 
 @dataclasses.dataclass
@@ -72,9 +73,14 @@ class TuneReport:
         return min(pool, key=lambda r: r.latency_cycles)
 
 
-def _design_result(dataflow, perm, desc, model, evo, t0) -> "DesignResult":
+def _design_result(dataflow, perm, desc, model, evo, t0,
+                   span=None) -> "DesignResult":
     """Materialize a ``DesignResult`` from a finished (or probe) search —
-    the single place the result metrics are derived from a genome."""
+    the single place the result metrics are derived from a genome (and
+    where the per-design trace span, entered at the top of
+    :func:`tune_design`, is closed)."""
+    if span is not None:
+        span.__exit__(None, None, None)
     g = evo.best
     rep = model.latency(g)
     res = model.resources(g)
@@ -130,6 +136,13 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
     registry's transfer warm start.
     """
     t0 = time.perf_counter()
+    tr = get_tracer()
+    # entered manually so both return paths (triage cut, full search) close
+    # it inside _design_result without re-indenting the whole flow
+    span = tr.span("design", cat="search",
+                   design="[%s] %s" % (",".join(dataflow), perm.label()),
+                   workload=wl.name)
+    span.__enter__()
     cfg = cfg or EvoConfig()
     desc = desc or build_descriptor(wl, dataflow, perm)
     model = model or PerformanceModel(desc, hw)
@@ -153,21 +166,30 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
             probe_cfg = dataclasses.replace(
                 cfg, epochs=max(1, probe_epochs),
                 time_budget_s=cfg.time_budget_s, max_evals=None)
-            probe = evolve(TilingProblem(space, model,
-                                         batch_model=batch_model),
-                           probe_cfg, seeds=list(extra_seeds))
+            with tr.span("design.triage", cat="search",
+                         probe_epochs=probe_epochs):
+                probe = evolve(TilingProblem(space, model,
+                                             batch_model=batch_model),
+                               probe_cfg, seeds=list(extra_seeds))
             cut = triage_factor if triage_factor is not None else \
                 abort_factor
             if model.latency_cycles(probe.best) > cut * inc:
                 probe.aborted = True
+                tr.instant("design.triage_cut", cat="search",
+                           factor=cut,
+                           probe_latency=model.latency_cycles(probe.best),
+                           incumbent=inc)
                 return _design_result(dataflow, perm, desc, model, probe,
-                                      t0)
+                                      t0, span=span)
 
     seeds: List[Genome] = list(extra_seeds)
     if use_mp_seed:
-        seeds += mp_solver.seed_population(
-            space, model, objective=mp_objective, n=max(2, cfg.parents // 4),
-            seed=cfg.seed, batch_model=batch_model)
+        with tr.span("design.mp_seed", cat="search",
+                     n=max(2, cfg.parents // 4)):
+            seeds += mp_solver.seed_population(
+                space, model, objective=mp_objective,
+                n=max(2, cfg.parents // 4),
+                seed=cfg.seed, batch_model=batch_model)
 
     if cfg.time_budget_s is not None:
         # the slice is a per-design wall-clock budget: whatever the MP
@@ -188,9 +210,10 @@ def tune_design(wl: Workload, dataflow: Tuple[str, ...], perm: Permutation,
             return inc is not None and \
                 model.latency_cycles(best_g) > abort_factor * inc
 
-    evo = evolve(TilingProblem(space, model, batch_model=batch_model),
-                 cfg, seeds=seeds, stop_fn=stop_fn)
-    return _design_result(dataflow, perm, desc, model, evo, t0)
+    with tr.span("design.evolve", cat="search", seeds=len(seeds)):
+        evo = evolve(TilingProblem(space, model, batch_model=batch_model),
+                     cfg, seeds=seeds, stop_fn=stop_fn)
+    return _design_result(dataflow, perm, desc, model, evo, t0, span=span)
 
 
 def tune_workload(wl: Workload, hw: HardwareProfile = U250,

@@ -40,6 +40,9 @@ def main(argv=None):
                     help="request arrivals per second (0 = all queued at "
                          "t=0)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="stream spans/counters to this .trace.jsonl "
+                         "(render with python -m repro.obs to-perfetto)")
     ap.add_argument("--registry-dir", default=None,
                     help="shared design-registry root; replicas pointing at "
                          "the same dir share tuned kernels (default: "
@@ -50,6 +53,10 @@ def main(argv=None):
                          "registry before serving; a replica against a "
                          "warm registry resolves all of them with 0 evals")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro import obs
+        obs.configure(args.trace, process_name="serve")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

@@ -73,8 +73,15 @@ def main(argv=None) -> None:
     ap.add_argument("--pretune", action="store_true",
                     help="model configs only: resolve every Pallas matmul "
                          "block config through the registry and exit")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="stream spans/counters to this .trace.jsonl "
+                         "(render with python -m repro.obs to-perfetto)")
     ap.add_argument("--json", default=None, help="write the report here")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        from repro import obs
+        obs.configure(args.trace, process_name="network")
 
     registry = None
     if args.registry_dir:

@@ -1,0 +1,60 @@
+"""Trace-inspection CLI for the observability spine (DESIGN.md §12).
+
+    python -m repro.obs summarize  RUN.trace.jsonl
+    python -m repro.obs to-perfetto RUN.trace.jsonl [--out RUN.perfetto.json]
+
+``summarize`` prints per-span timing (count/total/mean/p95), instant and
+counter inventories; ``to-perfetto`` writes the Chrome trace-event JSON
+that https://ui.perfetto.dev (or chrome://tracing) loads directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .perfetto import format_summary, load_events, summarize, to_perfetto
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.obs",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="command", required=True)
+    p = sub.add_parser("summarize", help="per-span/counter aggregate view")
+    p.add_argument("trace", help="a .trace.jsonl written via --trace")
+    p = sub.add_parser("to-perfetto",
+                       help="convert to Chrome trace-event JSON")
+    p.add_argument("trace")
+    p.add_argument("--out", default=None,
+                   help="output path (default: <trace>.perfetto.json)")
+    args = ap.parse_args(argv)
+
+    try:
+        events, corrupt = load_events(args.trace)
+    except OSError as exc:
+        print(f"cannot read {args.trace}: {exc}", file=sys.stderr)
+        return 1
+    if not events:
+        print(f"no events in {args.trace}"
+              + (f" ({corrupt} corrupt lines)" if corrupt else ""),
+              file=sys.stderr)
+        return 1
+
+    if args.command == "summarize":
+        print(format_summary(summarize(events), corrupt=corrupt))
+        return 0
+
+    out = args.out or (args.trace.rsplit(".jsonl", 1)[0].rsplit(
+        ".trace", 1)[0] + ".perfetto.json")
+    doc = to_perfetto(events)
+    with open(out, "w") as f:
+        json.dump(doc, f)
+    print(f"wrote {len(doc['traceEvents'])} events to {out} "
+          f"(open at https://ui.perfetto.dev)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

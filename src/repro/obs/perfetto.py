@@ -1,0 +1,160 @@
+"""JSONL trace -> Chrome trace-event JSON (Perfetto) + text summaries.
+
+The Chrome trace-event format is the lingua franca Perfetto
+(https://ui.perfetto.dev) loads directly: a ``{"traceEvents": [...]}``
+object whose entries carry ``ph`` (phase), ``pid``/``tid``, ``ts``
+(microseconds) and, for complete spans, ``dur``.  Mapping from the
+tracer's JSONL schema (``obs.trace``):
+
+    span    -> ph "X"  (complete: ts + dur; balanced by construction)
+    instant -> ph "i"  (scope "t": thread-scoped arrow)
+    counter -> ph "C"  (args = the sampled series; Perfetto renders one
+                        stacked counter track per name)
+    meta    -> ph "M"  process_name metadata
+
+Timestamps are re-based to the earliest event so traces start at t=0.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .metrics import percentile
+
+
+def load_events(path: str) -> Tuple[List[Dict], int]:
+    """Parse a ``.trace.jsonl`` file; returns (events, corrupt_lines).
+
+    A torn line (a crashed writer, a truncated copy) is counted and
+    skipped, never fatal — a trace is diagnostics, not state.
+    """
+    events: List[Dict] = []
+    corrupt = 0
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                corrupt += 1
+                continue
+            if isinstance(ev, dict) and "ev" in ev:
+                events.append(ev)
+            else:
+                corrupt += 1
+    return events, corrupt
+
+
+def to_perfetto(events: Iterable[Dict]) -> Dict:
+    """Chrome trace-event JSON for ``events`` (see module docstring)."""
+    events = list(events)
+    t0 = min((ev["ts"] for ev in events if "ts" in ev), default=0.0)
+    out: List[Dict] = []
+    named_pids = set()
+    for ev in events:
+        kind = ev.get("ev")
+        pid = ev.get("pid", 0)
+        tid = ev.get("tid", 0)
+        if kind == "meta":
+            if ev.get("name") == "process_name" and pid not in named_pids:
+                named_pids.add(pid)
+                out.append({"ph": "M", "name": "process_name", "pid": pid,
+                            "tid": tid, "args": ev.get("args", {})})
+            continue
+        ts = ev.get("ts", t0) - t0
+        if kind == "span":
+            out.append({"ph": "X", "name": ev.get("name", "?"),
+                        "cat": ev.get("cat") or "span", "pid": pid,
+                        "tid": tid, "ts": ts,
+                        "dur": max(0.0, ev.get("dur", 0.0)),
+                        "args": ev.get("args", {})})
+        elif kind == "instant":
+            out.append({"ph": "i", "name": ev.get("name", "?"),
+                        "cat": ev.get("cat") or "instant", "pid": pid,
+                        "tid": tid, "ts": ts, "s": "t",
+                        "args": ev.get("args", {})})
+        elif kind == "counter":
+            out.append({"ph": "C", "name": ev.get("name", "?"),
+                        "pid": pid, "tid": tid, "ts": ts,
+                        "args": ev.get("values", {})})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def summarize(events: Iterable[Dict]) -> Dict:
+    """Aggregate view of a trace: per-span-name timing, counter ranges,
+    instant counts, process inventory."""
+    spans: Dict[str, List[float]] = {}
+    instants: Dict[str, int] = {}
+    counters: Dict[str, Dict[str, Tuple[float, float]]] = {}
+    pids = set()
+    t_lo: Optional[float] = None
+    t_hi: Optional[float] = None
+    for ev in events:
+        pids.add(ev.get("pid", 0))
+        ts = ev.get("ts")
+        if ts is not None:
+            end = ts + ev.get("dur", 0.0)
+            t_lo = ts if t_lo is None else min(t_lo, ts)
+            t_hi = end if t_hi is None else max(t_hi, end)
+        kind = ev.get("ev")
+        if kind == "span":
+            spans.setdefault(ev.get("name", "?"), []).append(
+                ev.get("dur", 0.0))
+        elif kind == "instant":
+            name = ev.get("name", "?")
+            instants[name] = instants.get(name, 0) + 1
+        elif kind == "counter":
+            series = counters.setdefault(ev.get("name", "?"), {})
+            for key, val in ev.get("values", {}).items():
+                try:
+                    v = float(val)
+                except (TypeError, ValueError):
+                    continue
+                lo, hi = series.get(key, (v, v))
+                series[key] = (min(lo, v), max(hi, v))
+    return {
+        "wall_us": (t_hi - t_lo) if t_lo is not None else 0.0,
+        "processes": sorted(pids),
+        "spans": {
+            name: {"count": len(durs), "total_us": sum(durs),
+                   "mean_us": sum(durs) / len(durs),
+                   "p95_us": percentile(durs, 0.95),
+                   "max_us": max(durs)}
+            for name, durs in spans.items()},
+        "instants": instants,
+        "counters": {name: {k: {"min": lo, "max": hi}
+                            for k, (lo, hi) in series.items()}
+                     for name, series in counters.items()},
+    }
+
+
+def format_summary(summary: Dict, corrupt: int = 0) -> str:
+    """Human-readable rendering of :func:`summarize`'s dict."""
+    lines = [f"wall: {summary['wall_us'] / 1e6:.3f}s  "
+             f"processes: {len(summary['processes'])}  "
+             f"({', '.join(str(p) for p in summary['processes'][:8])}"
+             f"{', ...' if len(summary['processes']) > 8 else ''})"]
+    if corrupt:
+        lines.append(f"!! {corrupt} corrupt line(s) skipped")
+    if summary["spans"]:
+        lines.append(f"{'span':32s} {'count':>7s} {'total':>10s} "
+                     f"{'mean':>10s} {'p95':>10s}")
+        by_total = sorted(summary["spans"].items(),
+                          key=lambda kv: -kv[1]["total_us"])
+        for name, s in by_total:
+            lines.append(
+                f"{name[:32]:32s} {s['count']:7d} "
+                f"{s['total_us'] / 1e6:9.3f}s {s['mean_us'] / 1e3:8.2f}ms "
+                f"{s['p95_us'] / 1e3:8.2f}ms")
+    if summary["instants"]:
+        inst = ", ".join(f"{k}={v}"
+                         for k, v in sorted(summary["instants"].items()))
+        lines.append(f"instants: {inst}")
+    for name, series in sorted(summary["counters"].items()):
+        rng = ", ".join(f"{k}[{v['min']:g}..{v['max']:g}]"
+                        for k, v in sorted(series.items()))
+        lines.append(f"counter {name}: {rng}")
+    return "\n".join(lines)

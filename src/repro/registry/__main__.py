@@ -1,6 +1,6 @@
 """Operator CLI for the design registry.
 
-    python -m repro.registry list   [--root DIR]
+    python -m repro.registry list   [--root DIR] [--stats]
     python -m repro.registry show   <fingerprint-prefix>
     python -m repro.registry evict  <fingerprint-prefix> | --keep N
     python -m repro.registry export [--out FILE]
@@ -44,15 +44,30 @@ def _resolve(store: RegistryStore, prefix: str) -> Optional[Record]:
 
 
 def cmd_list(store: RegistryStore, args) -> int:
+    stats = getattr(args, "stats", False)
     rows = list(store.iter_records())
+    extra = f" {'engine':7s}" if stats else ""
     print(f"{'fingerprint':14s} {'kind':9s} {'workload':24s} {'hw':8s} "
-          f"{'latency':>12s} {'evals':>7s} {'hits':>5s} {'age':>5s}")
+          f"{'latency':>12s} {'evals':>7s} {'hits':>5s} {'age':>5s}{extra}")
     for rec in sorted(rows, key=lambda r: -r.updated_at):
+        extra = f" {rec.engine:7s}" if stats else ""
         print(f"{rec.fingerprint[:12]:14s} {rec.kind:9s} "
               f"{rec.workload[:24]:24s} {rec.hardware:8s} "
               f"{_latency(rec.best):12.4g} {rec.evals:7d} {rec.hits:5d} "
-              f"{_age(rec.updated_at):>5s}")
+              f"{_age(rec.updated_at):>5s}{extra}")
     print(f"# {len(rows)} record(s) in {store.root}")
+    if stats and rows:
+        # aggregate view: total hits (the .hits sidecars) and records per
+        # evaluator provenance, so an operator sees at a glance how hot
+        # the cache is and which engine produced it
+        engines = {}
+        for rec in rows:
+            engines[rec.engine] = engines.get(rec.engine, 0) + 1
+        by_engine = ", ".join(f"{k}={v}" for k, v in sorted(engines.items()))
+        hot = max(rows, key=lambda r: r.hits)
+        print(f"# hits: total={sum(r.hits for r in rows)} "
+              f"hottest={hot.fingerprint[:12]}({hot.hits})  "
+              f"engines: {by_engine}")
     return 0
 
 
@@ -105,8 +120,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.registry",
                                  description=__doc__, parents=[common])
     sub = ap.add_subparsers(dest="command", required=True)
-    sub.add_parser("list", help="one row per cached workload",
-                   parents=[common])
+    p = sub.add_parser("list", help="one row per cached workload",
+                       parents=[common])
+    p.add_argument("--stats", action="store_true",
+                   help="add the engine provenance column and a hit-count "
+                        "summary line")
     p = sub.add_parser("show", help="full JSON of one record",
                        parents=[common])
     p.add_argument("fingerprint")

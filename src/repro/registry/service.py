@@ -25,6 +25,7 @@ from repro.core.workloads import Workload
 from .fingerprint import workload_fingerprint
 from .store import Record, RegistryStore
 from .transfer import report_from_record
+from repro.obs import get_metrics, get_tracer
 
 
 class TuningService:
@@ -61,14 +62,23 @@ class TuningService:
             if rec is not None:
                 self._lru.move_to_end(fp.digest)
                 self.stats["lru_hits"] += 1
+                get_metrics().counter("service.lru_hits")
+                get_tracer().instant("service.lru_hit", cat="registry",
+                                     workload=wl.name)
                 return rec
         rec = self.store.get(fp)
         if rec is not None:
             self.stats["disk_hits"] += 1
+            get_metrics().counter("service.disk_hits")
+            get_tracer().instant("service.disk_hit", cat="registry",
+                                 workload=wl.name)
             self.store.touch(fp)
             self._remember(rec)
         else:
             self.stats["misses"] += 1
+            get_metrics().counter("service.misses")
+            get_tracer().instant("service.miss", cat="registry",
+                                 workload=wl.name)
         return rec
 
     def _remember(self, rec: Record) -> None:
@@ -108,10 +118,13 @@ class TuningService:
         from repro.core.engine import SearchSession, SessionConfig
         session_kwargs = dict(session_kwargs)
         session_kwargs.setdefault("session", SessionConfig(executor="serial"))
-        sess = SearchSession(wl, hw=self.hw, cfg=cfg,
-                             registry=self.store, **session_kwargs)
-        report = sess.run()
+        with get_tracer().span("service.tune", cat="registry",
+                               workload=wl.name):
+            sess = SearchSession(wl, hw=self.hw, cfg=cfg,
+                                 registry=self.store, **session_kwargs)
+            report = sess.run()
         self.stats["tunes"] += 1
+        get_metrics().counter("service.tunes")
         rec = self.store.get(self._fp(
             wl, divisors_only=session_kwargs.get("divisors_only", False)))
         if rec is not None:

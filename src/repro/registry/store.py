@@ -28,6 +28,7 @@ import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from .fingerprint import Fingerprint
+from repro.obs import get_metrics, get_tracer
 
 SCHEMA_VERSION = 3
 
@@ -115,7 +116,14 @@ class RegistryStore:
     def get(self, fp) -> Optional[Record]:
         """Record for ``fp`` (a Fingerprint or digest str), or None."""
         digest = fp.digest if isinstance(fp, Fingerprint) else fp
-        return self._load(self._path(digest))
+        t0 = time.perf_counter()
+        with get_tracer().span("registry.get", cat="registry",
+                               digest=digest[:12]):
+            rec = self._load(self._path(digest))
+        get_metrics().observe("registry.get_s", time.perf_counter() - t0)
+        get_metrics().counter("registry.get_hit" if rec is not None
+                              else "registry.get_miss")
+        return rec
 
     def _load(self, path: str) -> Optional[Record]:
         try:
@@ -202,19 +210,25 @@ class RegistryStore:
         ``.hits`` sidecar (see :meth:`touch`), so they survive the
         rewrite; the record's own ``hits`` field is written as 0.
         """
-        now = time.time()
-        existing = self.get(rec.fingerprint)
-        if existing is not None and keep_best and \
-                _latency(existing.best) < _latency(rec.best):
-            rec = dataclasses.replace(
-                existing, updated_at=now, hits=0,
-                evals=max(existing.evals, rec.evals))
-        else:
-            rec = dataclasses.replace(
-                rec, schema_version=SCHEMA_VERSION,
-                created_at=existing.created_at if existing else now,
-                hits=0, updated_at=now)
-        self._write(rec)
+        t0 = time.perf_counter()
+        with get_tracer().span("registry.put", cat="registry",
+                               digest=rec.fingerprint[:12],
+                               workload=rec.workload):
+            now = time.time()
+            existing = self.get(rec.fingerprint)
+            if existing is not None and keep_best and \
+                    _latency(existing.best) < _latency(rec.best):
+                rec = dataclasses.replace(
+                    existing, updated_at=now, hits=0,
+                    evals=max(existing.evals, rec.evals))
+            else:
+                rec = dataclasses.replace(
+                    rec, schema_version=SCHEMA_VERSION,
+                    created_at=existing.created_at if existing else now,
+                    hits=0, updated_at=now)
+            self._write(rec)
+        get_metrics().observe("registry.put_s", time.perf_counter() - t0)
+        get_metrics().counter("registry.puts")
         return dataclasses.replace(rec, hits=self._read_hits(
             self._path(rec.fingerprint)))
 
@@ -272,6 +286,9 @@ class RegistryStore:
             os.unlink(self._path(digest) + ".hits")
         except OSError:
             pass
+        get_metrics().counter("registry.evictions")
+        get_tracer().instant("registry.evict", cat="registry",
+                             digest=digest[:12])
         return True
 
     def evict_lru(self, max_records: int) -> List[str]:

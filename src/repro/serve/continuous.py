@@ -45,6 +45,7 @@ import numpy as np
 
 from .engine import EngineBase
 from .stats import Request, RequestMetrics, ServeStats
+from repro.obs import get_tracer
 
 
 class _Slot:
@@ -131,6 +132,7 @@ class ContinuousServingEngine(EngineBase):
                     f"(prompt {len(r.prompt)} + {r.max_new_tokens} new) "
                     f"> max_seq={T}")
         t0 = time.perf_counter()
+        tr = get_tracer()
         queue = self._sorted_queue(requests)
         cache = self.model.init_cache(S, T, dtype=self._cache_dtype)
         # every admission starts from this (immutable) empty one-slot cache
@@ -155,13 +157,22 @@ class ContinuousServingEngine(EngineBase):
             nonlocal membership_dirty
             req = slot.req
             outs[slot.req_idx] = np.array(slot.gen, np.int32)
-            metrics.append((slot.req_idx, RequestMetrics(
+            m = RequestMetrics(
                 request_id=req.request_id, prompt_len=len(req.prompt),
                 new_tokens=len(slot.gen),
                 queue_wait_s=slot.admit_s - req.arrival_s,
                 ttft_s=slot.first_s - req.arrival_s,
                 decode_s=now_s - slot.first_s,
-                finish_reason=reason)))
+                finish_reason=reason)
+            metrics.append((slot.req_idx, m))
+            if tr.enabled:
+                tr.instant("serve.finish", cat="serve",
+                           request_id=req.request_id, slot=slot.index,
+                           reason=reason, new_tokens=m.new_tokens)
+                # rolling request-level latency series: render alongside
+                # the slot-occupancy track for a live Perfetto view
+                tr.counter("serve.request", ttft_ms=m.ttft_s * 1e3,
+                           decode_tps=m.decode_tps)
             slot.state, slot.req, slot.gen = "free", None, []
             pos_host[slot.index] = T - 1
             membership_dirty = True
@@ -179,6 +190,17 @@ class ContinuousServingEngine(EngineBase):
                 slot.chunks = self._chunks_of(slot.req.prompt)
                 slot.cache = fresh_slot
                 slot.admit_s = now
+                tr.instant("serve.admit", cat="serve",
+                           request_id=slot.req.request_id, slot=slot.index,
+                           queue_wait_ms=(now - slot.req.arrival_s) * 1e3)
+            if tr.enabled:
+                tr.counter("serve.slots",
+                           decode=sum(1 for s in slots
+                                      if s.state == "decode"),
+                           prefill=sum(1 for s in slots
+                                       if s.state == "prefill"),
+                           free=sum(1 for s in slots if s.state == "free"))
+                tr.counter("serve.queue_depth", depth=len(queue))
             if all(s.state == "free" for s in slots):
                 # queue is non-empty but nothing has arrived yet
                 time.sleep(max(0.0, queue[0][1].arrival_s
@@ -192,10 +214,15 @@ class ContinuousServingEngine(EngineBase):
                     continue
                 chunk = slot.chunks.pop(0)
                 fn = self._chunk_fn(len(chunk))
-                toks, slot.cache = fn(
-                    self.params, slot.cache,
-                    jnp.asarray(chunk[None, :].astype(np.int32)),
-                    jnp.asarray([slot.pos], jnp.int32))
+                with tr.span("serve.prefill_chunk", cat="serve",
+                             slot=slot.index, tokens=len(chunk),
+                             request_id=slot.req.request_id):
+                    toks, slot.cache = fn(
+                        self.params, slot.cache,
+                        jnp.asarray(chunk[None, :].astype(np.int32)),
+                        jnp.asarray([slot.pos], jnp.int32))
+                    if tr.enabled:   # time the dispatch, not the queue
+                        jax.block_until_ready(toks)
                 slot.pos += len(chunk)
                 prefill_chunks += 1
                 if slot.chunks:
@@ -235,11 +262,17 @@ class ContinuousServingEngine(EngineBase):
                                       for s in slots], np.int32)
                 step_dev = jnp.asarray(step_host)
                 membership_dirty = False
-            cur_dev, pos_dev, cache = self.decode_tick(
-                self.params, cache, cur_dev, pos_dev, step_dev, kv0)
-            decode_steps += 1
-            # writable host mirror (np.asarray of a jax array is read-only)
-            cur_host = np.array(cur_dev)[:, 0]
+            with tr.span("serve.decode_tick", cat="serve",
+                         active=int(sum(1 for s in slots
+                                        if s.state == "decode"))
+                         if tr.enabled else 0):
+                cur_dev, pos_dev, cache = self.decode_tick(
+                    self.params, cache, cur_dev, pos_dev, step_dev, kv0)
+                decode_steps += 1
+                # writable host mirror (np.asarray of a jax array is
+                # read-only); this D2H copy is the tick's one device sync,
+                # so the span brackets real work, not dispatch latency
+                cur_host = np.array(cur_dev)[:, 0]
             pos_host += step_host
             now_s = time.perf_counter() - t0
             for slot in slots:
@@ -257,5 +290,6 @@ class ContinuousServingEngine(EngineBase):
                            requests=[m for _, m in sorted(metrics)],
                            wall_s=time.perf_counter() - t0,
                            decode_steps=decode_steps,
-                           prefill_chunks=prefill_chunks)
+                           prefill_chunks=prefill_chunks,
+                           engine=type(self).__name__)
         return outs, stats

@@ -32,6 +32,7 @@ import numpy as np
 from repro.models.api import Model
 
 from .stats import Request, RequestMetrics, ServeStats, as_requests
+from repro.obs import get_tracer
 
 
 @dataclasses.dataclass
@@ -207,6 +208,7 @@ class ServingEngine(EngineBase):
     def serve(self, requests: List[Request]
               ) -> Tuple[List[np.ndarray], ServeStats]:
         t0 = time.perf_counter()
+        tr = get_tracer()
         queue = self._sorted_queue(requests)
         outs: List[Optional[np.ndarray]] = [None] * len(requests)
         metrics: List[Tuple[int, RequestMetrics]] = []
@@ -221,24 +223,39 @@ class ServingEngine(EngineBase):
                     and queue[0][1].arrival_s <= now:
                 wave.append(queue.popleft())
             admit = time.perf_counter() - t0
-            toks, reasons, first_s, finish_s, steps = self._wave(
-                [req for _, req in wave], t0)
+            if tr.enabled:
+                tr.counter("serve.queue_depth", depth=len(queue))
+                for idx, req in wave:
+                    tr.instant("serve.admit", cat="serve",
+                               request_id=req.request_id,
+                               queue_wait_ms=(admit - req.arrival_s) * 1e3)
+            with tr.span("serve.wave", cat="serve", batch=len(wave)):
+                toks, reasons, first_s, finish_s, steps = self._wave(
+                    [req for _, req in wave], t0)
             decode_steps += steps
             prefills += 1
             for r, (idx, req) in enumerate(wave):
                 outs[idx] = toks[r]
-                metrics.append((idx, RequestMetrics(
+                m = RequestMetrics(
                     request_id=req.request_id, prompt_len=len(req.prompt),
                     new_tokens=len(toks[r]),
                     queue_wait_s=admit - req.arrival_s,
                     ttft_s=first_s - req.arrival_s,
                     decode_s=finish_s[r] - first_s,
-                    finish_reason=reasons[r])))
+                    finish_reason=reasons[r])
+                metrics.append((idx, m))
+                if tr.enabled:
+                    tr.instant("serve.finish", cat="serve",
+                               request_id=req.request_id,
+                               reason=reasons[r], new_tokens=m.new_tokens)
+                    tr.counter("serve.request", ttft_ms=m.ttft_s * 1e3,
+                               decode_tps=m.decode_tps)
         stats = ServeStats(scheduler=self.scheduler,
                            requests=[m for _, m in sorted(metrics)],
                            wall_s=time.perf_counter() - t0,
                            decode_steps=decode_steps,
-                           prefill_chunks=prefills)  # one prefill per wave
+                           prefill_chunks=prefills,  # one prefill per wave
+                           engine=type(self).__name__)
         return outs, stats
 
     def _wave(self, wave: List[Request], t0: float):

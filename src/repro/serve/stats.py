@@ -42,9 +42,12 @@ class RequestMetrics:
 
     @property
     def decode_tps(self) -> float:
-        """Steady-state decode rate (tokens after the first / decode time)."""
+        """Steady-state decode rate (tokens after the first / decode time).
+
+        0.0 when undefined — a single-token request, or a decode clocked
+        at zero duration — so aggregates and JSON reports stay finite."""
         if self.new_tokens <= 1 or self.decode_s <= 0:
-            return float("inf") if self.new_tokens > 1 else 0.0
+            return 0.0
         return (self.new_tokens - 1) / self.decode_s
 
     def to_dict(self) -> Dict:
@@ -55,12 +58,19 @@ class RequestMetrics:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Aggregate report for one serving run."""
+    """Aggregate report for one serving run.
+
+    Well-formed even when *zero* requests completed: every aggregate
+    (throughput, percentiles, rolling windows, finish-reason counts) is
+    all-zero/empty rather than raising, so a crashed or drained run still
+    renders a report."""
     scheduler: str
     requests: List[RequestMetrics]
     wall_s: float
     decode_steps: int = 0      # jit'd decode-step invocations
     prefill_chunks: int = 0    # jit'd prefill/chunk invocations
+    engine: str = ""           # engine-class provenance (which scheduler
+    #                            implementation produced these numbers)
 
     @property
     def total_new_tokens(self) -> int:
@@ -79,9 +89,22 @@ class ServeStats:
     def queue_wait_s(self, q: float = 0.5) -> float:
         return self._quantile([r.queue_wait_s for r in self.requests], q)
 
+    def rolling(self, window: int = 64) -> Dict:
+        """Windowed TTFT / decode-tok/s percentiles over the most recent
+        ``window`` completed requests (all-zero when none completed)."""
+        from repro.obs import Histogram
+        ttft = Histogram("ttft_s", window=window)
+        tps = Histogram("decode_tps", window=window)
+        for r in self.requests:
+            ttft.observe(r.ttft_s)
+            tps.observe(r.decode_tps)
+        return {"window": window, "ttft_s": ttft.summary(),
+                "decode_tps": tps.summary()}
+
     def to_dict(self) -> Dict:
         return {
             "scheduler": self.scheduler,
+            "engine": self.engine,
             "wall_s": self.wall_s,
             "requests": len(self.requests),
             "total_new_tokens": self.total_new_tokens,
@@ -92,12 +115,17 @@ class ServeStats:
             "ttft_s_p95": self.ttft_s(0.95),
             "queue_wait_s_p50": self.queue_wait_s(0.5),
             "queue_wait_s_p95": self.queue_wait_s(0.95),
+            "rolling": self.rolling(),
             "finish_reasons": {
                 reason: sum(1 for r in self.requests
                             if r.finish_reason == reason)
                 for reason in sorted({r.finish_reason
                                       for r in self.requests})},
-            "per_request": [r.to_dict() for r in self.requests],
+            # per-request provenance: rows from different runs stay
+            # attributable after a benchmark merges engine reports
+            "per_request": [dict(r.to_dict(), scheduler=self.scheduler,
+                                 engine=self.engine)
+                            for r in self.requests],
         }
 
     def summary(self) -> str:
