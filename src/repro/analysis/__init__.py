@@ -1,0 +1,63 @@
+"""repro.analysis — repo-aware static analysis as a CI gate.
+
+The pass encodes this repository's *bug history* as machine-checked
+invariants (DESIGN.md §13): fork-safety of the pool-worker import
+closure, int64-overflow hazards in the vectorized performance model,
+jit cache-key hygiene, scoped JAX config discipline, RNG-stream
+discipline, and atomic-write discipline for shared files.
+
+Programmatic entry point::
+
+    from repro.analysis import Project, default_rules, run_rules
+    report = run_rules(Project.load("src/repro"), default_rules())
+    assert report.exit_code == 0, report.render()
+
+CLI (the CI gate)::
+
+    python -m repro.analysis [--root src/repro] [--rule NAME ...] \
+        [--baseline FILE] [--json OUT] [--list-rules]
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .core import (
+    SEVERITY_ERROR,
+    SEVERITY_WARNING,
+    AnalysisReport,
+    Finding,
+    Rule,
+    Suppression,
+    baseline_payload,
+    collect_suppressions,
+    load_baseline,
+    run_rules,
+)
+from .project import ImportEdge, ModuleInfo, Project
+from .rules import ALL_RULES, RULES_BY_NAME
+
+
+def default_rules() -> List[Rule]:
+    """One instance of every registered rule, default configuration."""
+    return [cls() for cls in ALL_RULES]
+
+
+__all__ = [
+    "ALL_RULES",
+    "AnalysisReport",
+    "Finding",
+    "ImportEdge",
+    "ModuleInfo",
+    "Project",
+    "RULES_BY_NAME",
+    "Rule",
+    "SEVERITY_ERROR",
+    "SEVERITY_WARNING",
+    "Suppression",
+    "baseline_payload",
+    "collect_suppressions",
+    "default_rules",
+    "load_baseline",
+    "run_rules",
+]

@@ -1,0 +1,132 @@
+"""CLI for the static-analysis gate: ``python -m repro.analysis``.
+
+Exit codes: 0 = clean (no blocking findings), 1 = blocking findings,
+2 = usage error.  CI runs this as a hard gate and uploads the ``--json``
+report as an artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from .core import Rule, baseline_payload, load_baseline, run_rules
+from .project import Project
+from .rules import ALL_RULES, RULES_BY_NAME
+
+
+def _default_root() -> str:
+    """The package dir: src/repro relative to the repo root when run from
+    a checkout, else the installed package's own directory."""
+    here = os.path.dirname(os.path.abspath(__file__))   # .../repro/analysis
+    return os.path.dirname(here)                         # .../repro
+
+
+def _build_rules(names: Optional[List[str]]) -> List[Rule]:
+    if not names:
+        return [cls() for cls in ALL_RULES]
+    rules = []
+    for name in names:
+        cls = RULES_BY_NAME.get(name)
+        if cls is None:
+            known = ", ".join(sorted(RULES_BY_NAME))
+            raise SystemExit(
+                f"repro.analysis: unknown rule '{name}' (known: {known})"
+                if known else f"repro.analysis: unknown rule '{name}'")
+        rules.append(cls())
+    return rules
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-aware static analysis: fork-safety, overflow, "
+                    "jit hygiene, RNG and atomic-write discipline")
+    parser.add_argument(
+        "--root", default=None, metavar="DIR",
+        help="package directory to analyze (default: the repro package "
+             "this module lives in)")
+    parser.add_argument(
+        "--package", default=None, metavar="NAME",
+        help="dotted package name for DIR (default: basename of DIR)")
+    parser.add_argument(
+        "--rule", action="append", dest="rules", metavar="NAME",
+        help="run only this rule (repeatable; default: all)")
+    parser.add_argument(
+        "--baseline", default=None, metavar="FILE",
+        help="JSON baseline of accepted findings (they report but do not "
+             "block)")
+    parser.add_argument(
+        "--write-baseline", default=None, metavar="FILE",
+        help="write current unsuppressed findings as a baseline and exit 0")
+    parser.add_argument(
+        "--json", default=None, metavar="FILE",
+        help="also write the full report as JSON ('-' for stdout)")
+    parser.add_argument(
+        "--format", choices=("human", "json"), default="human",
+        help="stdout format (default: human)")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="list registered rules and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for cls in ALL_RULES:
+            print(f"{cls.name:18s} {cls.description}")
+        return 0
+
+    try:
+        rules = _build_rules(args.rules)
+    except SystemExit as exc:
+        print(exc, file=sys.stderr)
+        return 2
+
+    root = args.root or _default_root()
+    if not os.path.isdir(root):
+        print(f"repro.analysis: no such package dir: {root}",
+              file=sys.stderr)
+        return 2
+    project = Project.load(root, package_name=args.package)
+
+    baseline = None
+    if args.baseline:
+        if not os.path.exists(args.baseline):
+            print(f"repro.analysis: baseline not found: {args.baseline}",
+                  file=sys.stderr)
+            return 2
+        baseline = load_baseline(args.baseline)
+
+    report = run_rules(project, rules, baseline=baseline,
+                       all_rule_names=list(RULES_BY_NAME))
+
+    if args.write_baseline:
+        payload = baseline_payload(report.findings)
+        with open(args.write_baseline, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"repro.analysis: wrote baseline with "
+              f"{len(payload['accepted'])} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    if args.json:
+        text = json.dumps(report.to_json(), indent=2, sort_keys=True)
+        if args.json == "-":
+            print(text)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(text + "\n")
+
+    if args.format == "json":
+        if args.json != "-":
+            print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+    else:
+        print(report.render())
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,255 @@
+"""Rule framework: findings, suppressions, baselines, the runner.
+
+A :class:`Rule` inspects the whole :class:`~repro.analysis.project.Project`
+(cross-module — the fork-safety rule walks the import graph) and yields
+:class:`Finding`s.  The runner applies inline suppressions and an optional
+baseline, then reports.
+
+Suppression syntax (same line as the finding, justification REQUIRED;
+angle brackets below are placeholders, not literal)::
+
+    something_flagged()  # repro: ignore[<rule>] -- why this is safe
+
+A suppression without a justification does not suppress — the original
+finding stays live and a ``suppression-missing-justification`` finding is
+added.  A well-formed suppression that no longer matches any finding
+raises ``stale-suppression`` (dead suppressions rot into lies about what
+the code does).  Both meta-rules are errors: the gate fails either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .project import ModuleInfo, Project
+
+SEVERITY_ERROR = "error"
+SEVERITY_WARNING = "warning"
+
+# meta-rule names (reserved; real rules must not use them)
+RULE_MISSING_JUSTIFICATION = "suppression-missing-justification"
+RULE_STALE_SUPPRESSION = "stale-suppression"
+RULE_UNKNOWN_SUPPRESSION = "unknown-suppressed-rule"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str                    # package-relative posix path
+    line: int
+    col: int
+    severity: str
+    message: str
+    suppressed: bool = False
+    justification: Optional[str] = None
+    baselined: bool = False
+
+    @property
+    def blocking(self) -> bool:
+        return not self.suppressed and not self.baselined \
+            and self.severity == SEVERITY_ERROR
+
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity — line-number free so unrelated edits above
+        a baselined finding don't resurrect it."""
+        return (self.rule, self.path, self.message)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        mark = ""
+        if self.suppressed:
+            mark = " (suppressed: %s)" % (self.justification or "")
+        elif self.baselined:
+            mark = " (baselined)"
+        return (f"{self.path}:{self.line}:{self.col}: {self.severity} "
+                f"[{self.rule}] {self.message}{mark}")
+
+
+class Rule:
+    """Base class: one invariant, checked project-wide."""
+
+    name: str = ""
+    description: str = ""
+    severity: str = SEVERITY_ERROR
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, mod: ModuleInfo, line: int, message: str,
+                col: int = 0, severity: Optional[str] = None) -> Finding:
+        return Finding(rule=self.name, path=mod.rel_path, line=line,
+                       col=col, severity=severity or self.severity,
+                       message=message)
+
+
+# ---------------------------------------------------------------------- #
+# Inline suppressions
+# ---------------------------------------------------------------------- #
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore\[(?P<rules>[A-Za-z0-9_,\- ]+)\]"
+    r"(?:\s*--\s*(?P<why>.*\S))?")
+
+
+@dataclasses.dataclass
+class Suppression:
+    path: str
+    line: int
+    col: int
+    rules: Tuple[str, ...]
+    justification: Optional[str]
+    used: bool = False
+
+
+def collect_suppressions(mod: ModuleInfo) -> List[Suppression]:
+    out: List[Suppression] = []
+    for lineno, text in enumerate(mod.lines, start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",")
+                      if r.strip())
+        out.append(Suppression(path=mod.rel_path, line=lineno,
+                               col=m.start(), rules=rules,
+                               justification=m.group("why")))
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# Baselines: known findings accepted until paid down
+# ---------------------------------------------------------------------- #
+def load_baseline(path: str) -> List[Tuple[str, str, str]]:
+    with open(path, encoding="utf-8") as f:
+        payload = json.load(f)
+    return [(e["rule"], e["path"], e["message"])
+            for e in payload.get("accepted", [])]
+
+
+def baseline_payload(findings: Sequence[Finding]) -> Dict:
+    return {"version": 1,
+            "accepted": [{"rule": f.rule, "path": f.path,
+                          "message": f.message}
+                         for f in findings
+                         if not f.suppressed]}
+
+
+# ---------------------------------------------------------------------- #
+# Runner
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class AnalysisReport:
+    findings: List[Finding]
+    rules_run: List[str]
+    modules_scanned: int
+
+    @property
+    def blocking(self) -> List[Finding]:
+        return [f for f in self.findings if f.blocking]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.blocking else 0
+
+    def to_json(self) -> Dict:
+        sup = sum(1 for f in self.findings if f.suppressed)
+        base = sum(1 for f in self.findings if f.baselined)
+        return {
+            "version": 1,
+            "rules": self.rules_run,
+            "modules_scanned": self.modules_scanned,
+            "findings": [f.to_json() for f in self.findings],
+            "summary": {"total": len(self.findings),
+                        "blocking": len(self.blocking),
+                        "suppressed": sup, "baselined": base},
+        }
+
+    def render(self) -> str:
+        lines = [f.render() for f in sorted(
+            self.findings, key=lambda f: (f.path, f.line, f.rule))]
+        n_block = len(self.blocking)
+        lines.append(
+            f"repro.analysis: {len(self.rules_run)} rules over "
+            f"{self.modules_scanned} modules — {len(self.findings)} "
+            f"finding(s), {n_block} blocking")
+        return "\n".join(lines)
+
+
+def run_rules(project: Project, rules: Sequence[Rule],
+              baseline: Optional[Sequence[Tuple[str, str, str]]] = None,
+              all_rule_names: Optional[Sequence[str]] = None
+              ) -> AnalysisReport:
+    """Run ``rules`` over ``project`` and post-process suppressions.
+
+    ``all_rule_names`` is the full registry (defaults to the selected
+    rules): a suppression naming a registered-but-unselected rule is left
+    alone (a partial ``--rule`` run must not flag other rules' work), one
+    naming a rule that exists nowhere is an error.
+    """
+    raw: List[Finding] = []
+    for rule in rules:
+        raw.extend(rule.check(project))
+
+    suppressions: List[Suppression] = []
+    for mod in project.iter_modules():
+        suppressions.extend(collect_suppressions(mod))
+    selected = {r.name for r in rules}
+    registry = set(all_rule_names) if all_rule_names else set(selected)
+    registry |= selected
+
+    by_loc: Dict[Tuple[str, int], List[Suppression]] = {}
+    for s in suppressions:
+        by_loc.setdefault((s.path, s.line), []).append(s)
+
+    out: List[Finding] = []
+    for f in raw:
+        sup = next((s for s in by_loc.get((f.path, f.line), ())
+                    if f.rule in s.rules), None)
+        if sup is None:
+            out.append(f)
+            continue
+        sup.used = True
+        if sup.justification:
+            out.append(dataclasses.replace(
+                f, suppressed=True, justification=sup.justification))
+        else:
+            # unjustified: the suppression does NOT take effect
+            out.append(f)
+            out.append(Finding(
+                rule=RULE_MISSING_JUSTIFICATION, path=sup.path,
+                line=sup.line, col=sup.col, severity=SEVERITY_ERROR,
+                message=(f"suppression of [{f.rule}] has no justification; "
+                         "write `# repro: ignore[%s] -- <reason>`"
+                         % f.rule)))
+
+    for s in suppressions:
+        if s.used:
+            continue
+        unknown = sorted(set(s.rules) - registry)
+        if unknown:
+            out.append(Finding(
+                rule=RULE_UNKNOWN_SUPPRESSION, path=s.path, line=s.line,
+                col=s.col, severity=SEVERITY_ERROR,
+                message=("suppression names unknown rule(s) [%s]"
+                         % ",".join(unknown))))
+        elif all(r in selected for r in s.rules):
+            out.append(Finding(
+                rule=RULE_STALE_SUPPRESSION, path=s.path, line=s.line,
+                col=s.col, severity=SEVERITY_ERROR,
+                message=("suppression of [%s] no longer matches any "
+                         "finding on this line; delete it"
+                         % ",".join(s.rules))))
+
+    if baseline:
+        accepted = set(baseline)
+        out = [dataclasses.replace(f, baselined=True)
+               if not f.suppressed and f.key() in accepted else f
+               for f in out]
+
+    return AnalysisReport(findings=out, rules_run=[r.name for r in rules],
+                          modules_scanned=len(project.modules))

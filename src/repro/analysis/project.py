@@ -1,0 +1,279 @@
+"""Repo model for the static-analysis pass: parsed modules + import graph.
+
+Rules operate on a :class:`Project` — every module of the package parsed
+once, with *module-scope* imports resolved into an intra-package import
+graph.  The distinction between module-scope and function-scope imports
+is load-bearing: the fork-safety invariant (DESIGN.md §13) is about what
+gets imported when a module is *imported* (before the pool forks), not
+about lazy imports that run inside a worker after the fork.  A naive
+``grep "import jax"`` cannot tell the two apart; the AST can.
+
+``if TYPE_CHECKING:`` blocks are excluded (they never execute), ``try:``
+fallbacks and class bodies are included (they do).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportEdge:
+    """One module-scope import statement, resolved.
+
+    ``target`` is the full dotted module name as imported;
+    ``top`` is its first component (what decides internal vs external).
+    """
+
+    target: str
+    top: str
+    line: int
+    col: int
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file of the package."""
+
+    name: str                    # dotted: "repro.core.engine"
+    path: str                    # absolute filesystem path
+    rel_path: str                # posix path relative to the project root
+    tree: ast.Module
+    lines: List[str]             # raw source lines (1-indexed via [i-1])
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+def _is_type_checking_test(test: ast.expr) -> bool:
+    """True for ``if TYPE_CHECKING:`` / ``if typing.TYPE_CHECKING:``."""
+    if isinstance(test, ast.Name):
+        return test.id == "TYPE_CHECKING"
+    if isinstance(test, ast.Attribute):
+        return test.attr == "TYPE_CHECKING"
+    return False
+
+
+def _module_scope_nodes(tree: ast.Module) -> Iterator[ast.stmt]:
+    """Statements that execute at import time (skips function bodies and
+    TYPE_CHECKING-guarded blocks; descends into try/if/with and class
+    bodies, which all run on import)."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        node = stack.pop(0)
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue                      # lazy: runs only when called
+        if isinstance(node, ast.If):
+            if _is_type_checking_test(node.test):
+                stack.extend(node.orelse)
+                continue
+            stack.extend(node.body)
+            stack.extend(node.orelse)
+            continue
+        for field in ("body", "orelse", "finalbody", "handlers"):
+            children = getattr(node, field, None)
+            if not children:
+                continue
+            for child in children:
+                if isinstance(child, ast.ExceptHandler):
+                    stack.extend(child.body)
+                else:
+                    stack.append(child)
+
+
+class Project:
+    """All parsed modules of one package tree plus the import graph.
+
+    ``Project.load("/path/to/src/repro")`` walks every ``*.py`` under the
+    package directory.  The package may be a namespace package (no
+    top-level ``__init__.py``) — module names are derived from paths.
+    """
+
+    def __init__(self, package: str, root: str,
+                 modules: Dict[str, ModuleInfo]):
+        self.package = package          # top-level package name ("repro")
+        self.root = root                # dir containing the package files
+        self.modules = modules          # dotted name -> ModuleInfo
+        self._scope_imports: Dict[str, List[ImportEdge]] = {}
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def load(cls, package_dir: str,
+             package_name: Optional[str] = None) -> "Project":
+        package_dir = os.path.abspath(package_dir)
+        package = package_name or os.path.basename(package_dir.rstrip("/"))
+        modules: Dict[str, ModuleInfo] = {}
+        for dirpath, dirnames, filenames in os.walk(package_dir):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith((".", "__pycache__")))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, package_dir)
+                parts = rel[:-3].replace(os.sep, "/").split("/")
+                if parts[-1] == "__init__":
+                    parts = parts[:-1]
+                name = ".".join([package] + parts) if parts else package
+                with open(path, encoding="utf-8") as f:
+                    source = f.read()
+                modules[name] = ModuleInfo(
+                    name=name, path=path,
+                    rel_path=os.path.join(package, rel).replace(os.sep, "/"),
+                    tree=ast.parse(source, filename=path),
+                    lines=source.splitlines())
+        return cls(package, package_dir, modules)
+
+    # -- lookups ---------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self.modules
+
+    def get(self, name: str) -> Optional[ModuleInfo]:
+        return self.modules.get(name)
+
+    def iter_modules(self) -> Iterator[ModuleInfo]:
+        for name in sorted(self.modules):
+            yield self.modules[name]
+
+    def is_internal(self, target: str) -> bool:
+        return target == self.package or \
+            target.startswith(self.package + ".")
+
+    # -- import resolution -----------------------------------------------
+    def _resolve_from(self, mod: ModuleInfo,
+                      node: ast.ImportFrom) -> List[Tuple[str, str]]:
+        """(target, top) pairs for a ``from X import a, b`` statement."""
+        if node.level == 0:
+            base = node.module or ""
+        else:
+            # relative: strip `level` trailing components off the module
+            # package path (a plain module contributes its own package)
+            parts = mod.name.split(".")
+            if not self._is_package(mod.name):
+                parts = parts[:-1]
+            cut = node.level - 1
+            parts = parts[:len(parts) - cut] if cut else parts
+            base = ".".join(parts)
+            if node.module:
+                base = f"{base}.{node.module}" if base else node.module
+        out: List[Tuple[str, str]] = []
+        if base:
+            out.append((base, base.split(".")[0]))
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            child = f"{base}.{alias.name}" if base else alias.name
+            # `from pkg import mod` binds a submodule: keep the edge only
+            # when the child actually is a module of this project
+            if child in self.modules:
+                out.append((child, child.split(".")[0]))
+        return out
+
+    def _is_package(self, name: str) -> bool:
+        if name == self.package:
+            return True
+        mod = self.modules.get(name)
+        return mod is not None and mod.path.endswith("__init__.py")
+
+    def module_scope_imports(self, name: str) -> List[ImportEdge]:
+        """Resolved module-scope imports of module ``name`` (cached)."""
+        if name in self._scope_imports:
+            return self._scope_imports[name]
+        mod = self.modules[name]
+        edges: List[ImportEdge] = []
+        for node in _module_scope_nodes(mod.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    edges.append(ImportEdge(
+                        target=alias.name, top=alias.name.split(".")[0],
+                        line=node.lineno, col=node.col_offset))
+            elif isinstance(node, ast.ImportFrom):
+                for target, top in self._resolve_from(mod, node):
+                    edges.append(ImportEdge(target=target, top=top,
+                                            line=node.lineno,
+                                            col=node.col_offset))
+        self._scope_imports[name] = edges
+        return edges
+
+    def _with_ancestors(self, name: str) -> List[str]:
+        """A module plus every ancestor package that exists in the project
+        (importing ``a.b.c`` executes ``a/__init__`` and ``a.b/__init__``)."""
+        parts = name.split(".")
+        out = []
+        for i in range(1, len(parts) + 1):
+            candidate = ".".join(parts[:i])
+            if candidate in self.modules:
+                out.append(candidate)
+        return out
+
+    def internal_targets(self, name: str) -> List[Tuple[str, ImportEdge]]:
+        """(module, edge) for each internal module-scope import, ancestors
+        included."""
+        out: List[Tuple[str, ImportEdge]] = []
+        for edge in self.module_scope_imports(name):
+            if not self.is_internal(edge.target):
+                continue
+            target = edge.target
+            # importing a missing leaf (e.g. `from repro.core import x`
+            # resolved only to the package) still executes the ancestors
+            while target and target not in self.modules and "." in target:
+                target = target.rsplit(".", 1)[0]
+            for m in self._with_ancestors(target):
+                out.append((m, edge))
+        return out
+
+    def external_imports(self, name: str) -> List[ImportEdge]:
+        """Module-scope imports that leave the package."""
+        return [e for e in self.module_scope_imports(name)
+                if not self.is_internal(e.target)]
+
+    # -- reachability ------------------------------------------------------
+    def import_closure(self, entries: Sequence[str]
+                       ) -> Dict[str, Tuple[str, ...]]:
+        """Modules transitively imported (at module scope) from ``entries``.
+
+        Returns ``{module: chain}`` where ``chain`` is one witness import
+        path from an entry to the module (entries map to themselves).
+        """
+        closure: Dict[str, Tuple[str, ...]] = {}
+        queue: List[str] = []
+        for entry in entries:
+            for m in self._with_ancestors(entry):
+                if m not in closure:
+                    closure[m] = (m,)
+                    queue.append(m)
+        while queue:
+            cur = queue.pop(0)
+            for target, _edge in self.internal_targets(cur):
+                if target not in closure:
+                    closure[target] = closure[cur] + (target,)
+                    queue.append(target)
+        return closure
+
+
+def numpy_aliases(tree: ast.Module) -> Set[str]:
+    """Names the module binds to the numpy package (``np``, ``numpy``)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "numpy" or alias.name.startswith("numpy."):
+                    out.add(alias.asname or alias.name.split(".")[0])
+    return out
+
+
+def stdlib_random_aliases(tree: ast.Module) -> Set[str]:
+    """Names bound to the stdlib ``random`` module."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "random":
+                    out.add(alias.asname or "random")
+    return out

@@ -1,0 +1,35 @@
+"""The rule registry: every repo invariant the analysis pass enforces."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Type
+
+from ..core import Rule
+from .atomic_write import AtomicWriteRule
+from .fork_safety import ForkSafetyRule
+from .int64_overflow import Int64OverflowRule
+from .jit_hygiene import JitHygieneRule
+from .rng_discipline import RngDisciplineRule
+from .scoped_config import ScopedConfigRule
+
+ALL_RULES: List[Type[Rule]] = [
+    ForkSafetyRule,
+    Int64OverflowRule,
+    JitHygieneRule,
+    ScopedConfigRule,
+    RngDisciplineRule,
+    AtomicWriteRule,
+]
+
+RULES_BY_NAME: Dict[str, Type[Rule]] = {r.name: r for r in ALL_RULES}
+
+__all__ = [
+    "ALL_RULES",
+    "RULES_BY_NAME",
+    "AtomicWriteRule",
+    "ForkSafetyRule",
+    "Int64OverflowRule",
+    "JitHygieneRule",
+    "RngDisciplineRule",
+    "ScopedConfigRule",
+]

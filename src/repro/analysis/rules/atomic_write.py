@@ -1,0 +1,135 @@
+"""atomic-write: registry/obs file writes must go through the safe helpers.
+
+The registry store and the trace sink are *shared* files: concurrent
+tuners, forked pool workers and serving replicas all touch them without
+locks.  That only works because every write path uses one of two
+patterns (DESIGN.md §9/§12):
+
+  * **atomic rename** — ``tempfile.mkstemp`` in the destination dir,
+    write the temp, ``os.replace`` over the target (readers always see a
+    complete record, crashes leave only ``*.tmp`` litter);
+  * **O_APPEND** — one ``os.write`` per event on an ``O_APPEND``
+    descriptor (Linux keeps each append atomic, so concurrent writers
+    interleave whole lines, never bytes).
+
+A bare ``open(path, "w")`` in these packages is a torn-file bug waiting
+for a crash or a concurrent writer.  The rule flags write-mode ``open``
+calls, ``os.open`` without ``O_APPEND``, and ``Path.write_text/bytes``
+in the configured packages; ``os.fdopen`` (the mkstemp pattern's second
+half) is legal by construction.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Sequence
+
+from ..core import Finding, Rule
+from ..project import ModuleInfo, Project
+
+DEFAULT_SCOPES = ("repro.registry", "repro.obs")
+_WRITE_MODES = set("wax")
+
+
+def _mode_is_write(mode: str) -> bool:
+    return bool(set(mode) & _WRITE_MODES)
+
+
+def _call_chain(node: ast.Call) -> str:
+    parts = []
+    cur = node.func
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+class AtomicWriteRule(Rule):
+    name = "atomic-write"
+    description = ("file writes in registry/obs must use the mkstemp+"
+                   "os.replace or O_APPEND helpers, never bare open(w)")
+
+    def __init__(self, scopes: Sequence[str] = DEFAULT_SCOPES):
+        self.scopes = tuple(scopes)
+
+    def _in_scope(self, mod: ModuleInfo) -> bool:
+        return any(mod.name == s or mod.name.startswith(s + ".")
+                   for s in self.scopes)
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.iter_modules():
+            if not self._in_scope(mod):
+                continue
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _call_chain(node)
+            if chain == "open":
+                mode = self._literal_mode(node)
+                if mode is not None and _mode_is_write(mode):
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            f"bare open(..., {mode!r}) in a shared-file "
+                            "package; write a tempfile.mkstemp temp and "
+                            "os.replace it over the target (atomic "
+                            "rename), or append via an O_APPEND "
+                            "descriptor — a crash or concurrent writer "
+                            "tears this file otherwise"))
+            elif chain == "os.open":
+                if not self._flags_mention_append(node) and \
+                        self._flags_mention_write(node):
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            "os.open() for writing without O_APPEND; "
+                            "shared-file writers must append atomically "
+                            "or go through the mkstemp+os.replace "
+                            "helper"))
+            elif chain.endswith(".write_text") or \
+                    chain.endswith(".write_bytes"):
+                yield self.finding(
+                    mod, node.lineno, col=node.col_offset,
+                    message=(
+                        "Path.write_text/write_bytes is a non-atomic "
+                        "whole-file write; use the mkstemp+os.replace "
+                        "pattern in shared-file packages"))
+
+    @staticmethod
+    def _literal_mode(node: ast.Call) -> str:
+        """The open() mode string when statically known ('' = default
+        read mode; None = dynamic, can't reason)."""
+        mode_node = None
+        if len(node.args) >= 2:
+            mode_node = node.args[1]
+        else:
+            for kw in node.keywords:
+                if kw.arg == "mode":
+                    mode_node = kw.value
+        if mode_node is None:
+            return "r"
+        if isinstance(mode_node, ast.Constant) and \
+                isinstance(mode_node.value, str):
+            return mode_node.value
+        return None
+
+    @staticmethod
+    def _flags_names(node: ast.Call):
+        if len(node.args) >= 2:
+            for n in ast.walk(node.args[1]):
+                if isinstance(n, ast.Attribute):
+                    yield n.attr
+                elif isinstance(n, ast.Name):
+                    yield n.id
+
+    def _flags_mention_append(self, node: ast.Call) -> bool:
+        return any(n == "O_APPEND" for n in self._flags_names(node))
+
+    def _flags_mention_write(self, node: ast.Call) -> bool:
+        return any(n in ("O_WRONLY", "O_RDWR", "O_CREAT", "O_TRUNC")
+                   for n in self._flags_names(node))

@@ -1,0 +1,63 @@
+"""fork-safety: the pool-worker import closure must stay jax-free.
+
+``SearchSession`` auto-picks the *fork* start method only when the parent
+process carries no jax runtime threads (``core.engine._fork_safe``), and
+the PR 5/6 work keeps ``core.engine``/``core.tuner`` importable without
+jax precisely so that a sweep can fork.  One careless module-scope
+``import jax`` anywhere in that import closure silently pushes every
+sweep onto the ~100x more expensive spawn path — or, worse, deadlocks a
+fork under a jax that was imported first.  PR 5/6 audited this by hand;
+this rule audits it on every run.
+
+The check is whole-import-graph reachability over *module-scope* imports
+(lazy function-scope imports such as ``evolutionary._jax_available``'s
+probe are deliberately legal — they run post-fork, inside the worker).
+``tests/test_analysis.py`` validates the computed closure against ground
+truth by importing each reachable module in a subprocess with ``jax``
+stubbed to raise.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence, Tuple
+
+from ..core import Finding, Rule
+from ..project import Project
+
+DEFAULT_ENTRIES = ("repro.core.engine", "repro.core.tuner")
+DEFAULT_FORBIDDEN = ("jax", "jaxlib")
+
+
+class ForkSafetyRule(Rule):
+    name = "fork-safety"
+    description = ("no module reachable (module-scope imports) from the "
+                   "fork-start pool-worker entry modules may import jax")
+
+    def __init__(self, entries: Sequence[str] = DEFAULT_ENTRIES,
+                 forbidden: Sequence[str] = DEFAULT_FORBIDDEN):
+        self.entries = tuple(entries)
+        self.forbidden = frozenset(forbidden)
+
+    def reachable(self, project: Project) -> Dict[str, Tuple[str, ...]]:
+        """{module: witness chain} for the fork-worker import closure."""
+        present = [e for e in self.entries if e in project]
+        return project.import_closure(present)
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        closure = self.reachable(project)
+        for name in sorted(closure):
+            mod = project.get(name)
+            if mod is None:
+                continue
+            for edge in project.external_imports(name):
+                if edge.top not in self.forbidden:
+                    continue
+                chain = " -> ".join(closure[name])
+                yield self.finding(
+                    mod, edge.line, col=edge.col,
+                    message=(
+                        f"module-scope import of '{edge.target}' in a "
+                        f"fork-worker-reachable module (chain: {chain}); "
+                        "the SearchSession fork fast path requires this "
+                        "closure to stay jax-free — import it lazily "
+                        "inside the function that needs it"))

@@ -1,0 +1,134 @@
+"""int64-overflow: events x bytes products must promote to float64 first.
+
+The bug this encodes (fixed in PR 6): ``BatchPerformanceModel`` computed
+off-chip traffic as ``ev * tb`` on int64 ndarrays.  At matmul(4096^3)
+scale, event counts (~7e10) times tile bytes (~7e7) exceed 2**63 and the
+product wraps negative — silently, because NumPy integer overflow does
+not raise.  The scalar oracle uses Python ints (arbitrary precision), so
+only the vectorized path corrupted, and only at scales the unit tests
+did not cover.  The fix promotes one operand with ``.astype(np.float64)``
+*before* the multiply (exact below 2**53, which covers every realistic
+workload).
+
+Heuristic: inside any function that touches numpy, flag ``a * b`` (and
+``a *= b``) where one side names an event/episode/count quantity and the
+other names a byte quantity, unless either subtree already produces a
+float (``astype(...)``/``np.float64``/``float()``/a division/a float
+literal).  Pure-Python helpers that never touch numpy are exempt —
+Python ints cannot overflow.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, List, Sequence, Set
+
+from ..core import Finding, Rule
+from ..project import ModuleInfo, Project, numpy_aliases
+
+# identifier fragments marking the two operand families
+_BYTEISH_EXACT = {"tb", "nbytes"}
+_BYTEISH_SUB = ("bytes", "byte")
+_EVENTISH_EXACT = {"ev", "load", "store", "loads", "stores", "episodes"}
+_EVENTISH_SUB = ("event", "episode", "count")
+
+_FLOAT_CASTS = {"float", "float64", "float32", "f8"}
+
+
+def _names(node: ast.AST) -> Iterator[str]:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            yield n.id
+        elif isinstance(n, ast.Attribute):
+            yield n.attr
+
+
+def _byteish(node: ast.AST) -> bool:
+    return any(s in _BYTEISH_EXACT or any(f in s for f in _BYTEISH_SUB)
+               for s in _names(node))
+
+
+def _eventish(node: ast.AST) -> bool:
+    return any(s in _EVENTISH_EXACT or any(f in s for f in _EVENTISH_SUB)
+               for s in _names(node))
+
+
+def _promoted(node: ast.AST) -> bool:
+    """True if the subtree provably produces floats already."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Div):
+            return True                      # true division yields float
+        if isinstance(n, ast.Constant) and isinstance(n.value, float):
+            return True
+        if isinstance(n, ast.Call):
+            fn = n.func
+            if isinstance(fn, ast.Name) and fn.id in _FLOAT_CASTS:
+                return True
+            if isinstance(fn, ast.Attribute):
+                if fn.attr in _FLOAT_CASTS:
+                    return True              # np.float64(...), x.float64?
+                if fn.attr == "astype" and any(
+                        s in _FLOAT_CASTS for s in _names(n)):
+                    return True
+    return False
+
+
+def _function_uses_numpy(fn: ast.AST, np_names: Set[str]) -> bool:
+    if not np_names:
+        return False
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and n.id in np_names:
+            return True
+    return False
+
+
+class Int64OverflowRule(Rule):
+    name = "int64-overflow"
+    description = ("numpy integer products of event counts and byte sizes "
+                   "must promote to float64 before the multiply")
+
+    def __init__(self, modules: Sequence[str] = ()):
+        # empty = whole project (the default); a non-empty list restricts
+        self.modules = tuple(modules)
+
+    def _in_scope(self, mod: ModuleInfo) -> bool:
+        return not self.modules or mod.name in self.modules
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.iter_modules():
+            if not self._in_scope(mod):
+                continue
+            np_names = numpy_aliases(mod.tree)
+            if not np_names:
+                continue
+            for fn in ast.walk(mod.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if not _function_uses_numpy(fn, np_names):
+                    continue                # pure-Python ints: exact
+                yield from self._check_function(mod, fn)
+
+    def _check_function(self, mod: ModuleInfo,
+                        fn: ast.AST) -> Iterator[Finding]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, ast.Mult):
+                pairs = [(node.left, node.right)]
+            elif isinstance(node, ast.AugAssign) and \
+                    isinstance(node.op, ast.Mult):
+                pairs = [(node.target, node.value)]
+            else:
+                continue
+            for a, b in pairs:
+                hazard = (_eventish(a) and _byteish(b)) or \
+                         (_byteish(a) and _eventish(b))
+                if hazard and not (_promoted(a) or _promoted(b)):
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            "integer multiply of an event-count and a "
+                            "byte-size expression: at 4096^3 scale this "
+                            "wraps int64 silently (the PR 6 fitness_matrix "
+                            "bug); promote one operand with "
+                            ".astype(np.float64) before the product"))

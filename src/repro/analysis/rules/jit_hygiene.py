@@ -1,0 +1,177 @@
+"""jit-hygiene: jit cache keys must be static and immutable.
+
+Two concrete bug shapes from this repo's history (PR 3):
+
+1. **Mutable global captured at trace time.**  ``kernels/ops.py`` once
+   resolved ``_INTERPRET_DEFAULT`` *inside* the jitted wrapper: the first
+   trace froze whatever the flag held, and a later
+   ``set_interpret_default()`` flip silently kept serving the stale mode
+   from the jit cache.  The fix resolves the flag outside jit and passes
+   the frozen config as a static argument.  The rule flags any
+   jit-decorated function whose body reads a module global that some
+   function in the module rebinds via a ``global`` statement.
+
+2. **Config objects as traced arguments.**  A kernel-config dataclass
+   passed as a *dynamic* jit argument either crashes (non-array pytree
+   leaf) or — if it slips through as a hashable leaf — fails to retrace
+   when a field changes.  Config-like parameters (``config``, ``cfg``,
+   ``*_config``, ``*_cfg``) of a jitted function must appear in
+   ``static_argnames``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+
+from ..core import Finding, Rule
+from ..project import ModuleInfo, Project
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    """`jax.jit` / `jit` as a bare reference."""
+    if isinstance(node, ast.Name):
+        return node.id == "jit"
+    if isinstance(node, ast.Attribute):
+        return node.attr == "jit"
+    return False
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The Call carrying jit options for a decorator/wrapping expression.
+
+    Handles ``@jax.jit``, ``@jax.jit(...)`` (via partial-style call),
+    ``@functools.partial(jax.jit, ...)`` and ``jax.jit(fn, ...)``.
+    Returns the Call node whose keywords hold ``static_argnames`` (or
+    None when the decorator is the bare ``jax.jit`` reference).
+    """
+    if isinstance(node, ast.Call):
+        fn = node.func
+        if _is_jit_ref(fn):
+            return node
+        if isinstance(fn, (ast.Name, ast.Attribute)) and \
+                (getattr(fn, "id", None) == "partial"
+                 or getattr(fn, "attr", None) == "partial"):
+            if node.args and _is_jit_ref(node.args[0]):
+                return node
+    return None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    return _is_jit_ref(dec) or _jit_call(dec) is not None
+
+
+def _static_argnames(call: Optional[ast.Call]) -> Optional[Set[str]]:
+    """The literal static_argnames set, or None when not statically known."""
+    if call is None:
+        return set()
+    if any(kw.arg == "static_argnums" for kw in call.keywords):
+        return None                      # positional spec: can't reason
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return {v.value}
+        if isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+            names = set()
+            for elt in v.elts:
+                if not (isinstance(elt, ast.Constant)
+                        and isinstance(elt.value, str)):
+                    return None
+                names.add(elt.value)
+            return names
+        return None
+    return set()
+
+
+def _configish(param: str) -> bool:
+    return param in ("config", "cfg") or param.endswith("_config") \
+        or param.endswith("_cfg")
+
+
+def _mutable_globals(tree: ast.Module) -> Set[str]:
+    """Names any function rebinds via a ``global`` statement."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            out.update(node.names)
+    return out
+
+
+class JitHygieneRule(Rule):
+    name = "jit-hygiene"
+    description = ("jitted functions must not read mutable module globals "
+                   "at trace time, and config params must be static jit "
+                   "arguments")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.iter_modules():
+            if not self._imports_jax(project, mod):
+                continue
+            mutable = _mutable_globals(mod.tree)
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    jit_dec = next((d for d in node.decorator_list
+                                    if _is_jit_decorator(d)), None)
+                    if jit_dec is None:
+                        continue
+                    yield from self._check_params(
+                        mod, node.name, node.lineno,
+                        [a.arg for a in node.args.args],
+                        _static_argnames(_jit_call(jit_dec)))
+                    yield from self._check_globals(mod, node, mutable)
+                elif isinstance(node, ast.Call):
+                    # jax.jit(lambda ...: ..., static_argnames=...) form
+                    if not _is_jit_ref(node.func) or not node.args:
+                        continue
+                    target = node.args[0]
+                    if isinstance(target, ast.Lambda):
+                        yield from self._check_params(
+                            mod, "<lambda>", node.lineno,
+                            [a.arg for a in target.args.args],
+                            _static_argnames(node))
+                        yield from self._check_globals(mod, target, mutable)
+
+    @staticmethod
+    def _imports_jax(project: Project, mod: ModuleInfo) -> bool:
+        return any(e.top in ("jax", "jaxlib")
+                   for e in project.module_scope_imports(mod.name))
+
+    def _check_params(self, mod: ModuleInfo, fn_name: str, lineno: int,
+                      params: List[str],
+                      static: Optional[Set[str]]) -> Iterator[Finding]:
+        if static is None:
+            return                      # non-literal spec: can't reason
+        for p in params:
+            if _configish(p) and p not in static:
+                yield self.finding(
+                    mod, lineno,
+                    message=(
+                        f"jitted function '{fn_name}' takes config-like "
+                        f"parameter '{p}' as a traced argument; list it "
+                        "in static_argnames so it keys the jit cache "
+                        "(a traced config either crashes or serves stale "
+                        "kernels after a field change — the PR 3 "
+                        "interpret-mode bug)"))
+
+    def _check_globals(self, mod: ModuleInfo, fn: ast.AST,
+                       mutable: Set[str]) -> Iterator[Finding]:
+        if not mutable:
+            return
+        # names the function itself binds as parameters shadow the global
+        bound = {a.arg for a in fn.args.args}
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                        and n.id in mutable and n.id not in bound:
+                    yield self.finding(
+                        mod, n.lineno, col=n.col_offset,
+                        message=(
+                            f"jitted function reads mutable module global "
+                            f"'{n.id}' at trace time; the first trace "
+                            "pins its value in the jit cache and later "
+                            "mutations are silently ignored — resolve it "
+                            "outside jit and pass it as a static "
+                            "argument"))

@@ -1,0 +1,93 @@
+"""rng-discipline: no draws from the process-global RNG streams.
+
+PR 5's SoA engine is bit-identical to the object-path oracle because
+every random draw flows through *stream-exact* ``getrandbits`` replicas
+of one seeded ``random.Random`` instance (``design_space._randbelow``
+mirrors CPython's consumption draw-for-draw).  One call to the module-
+level ``random.*`` stream — or NumPy's legacy ``np.random.*`` global —
+inside that machinery desynchronizes the replica and the fixed-seed
+bit-equality contract (tests/test_batch_equivalence.py) breaks in ways
+that look like search noise, not like a bug.
+
+Flags, project-wide:
+  * ``random.<draw>(...)`` on the stdlib module (``random.Random(...)``
+    and other instance constructions are legal),
+  * ``from random import <draw>`` (the import itself injects the global
+    stream),
+  * ``np.random.<fn>(...)`` legacy global calls (``default_rng``,
+    ``Generator``, ``SeedSequence``, ``PCG64`` stay legal).
+
+``jax.random.*`` is exempt: the keyed functional RNG is exactly the
+discipline this rule exists to protect.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from ..core import Finding, Rule
+from ..project import ModuleInfo, Project, stdlib_random_aliases
+
+_STDLIB_DRAWS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "betavariate",
+    "expovariate", "triangular", "getrandbits", "randbytes", "seed",
+    "vonmisesvariate", "paretovariate", "weibullvariate", "lognormvariate",
+}
+_NP_LEGAL = {"default_rng", "Generator", "SeedSequence", "PCG64",
+             "Philox", "MT19937", "BitGenerator"}
+
+
+class RngDisciplineRule(Rule):
+    name = "rng-discipline"
+    description = ("draws must come from seeded Random/default_rng "
+                   "instances, never the process-global streams")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.iter_modules():
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        random_names = stdlib_random_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "random" \
+                    and node.level == 0:
+                bad = [a.name for a in node.names
+                       if a.name in _STDLIB_DRAWS]
+                if bad:
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            "`from random import %s` binds draws on the "
+                            "process-global stream; construct a seeded "
+                            "random.Random(seed) and draw from it"
+                            % ", ".join(bad)))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute):
+                fn = node.func
+                # random.<draw>(...) on the stdlib module object
+                if isinstance(fn.value, ast.Name) and \
+                        fn.value.id in random_names and \
+                        fn.attr in _STDLIB_DRAWS:
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            f"random.{fn.attr}() draws from the process-"
+                            "global stream and desyncs the stream-exact "
+                            "getrandbits replicas (PR 5); draw from a "
+                            "seeded random.Random instance threaded "
+                            "through the call"))
+                # np.random.<fn>(...) legacy global state
+                elif isinstance(fn.value, ast.Attribute) and \
+                        fn.value.attr == "random" and \
+                        isinstance(fn.value.value, ast.Name) and \
+                        fn.value.value.id in ("np", "numpy") and \
+                        fn.attr not in _NP_LEGAL:
+                    yield self.finding(
+                        mod, node.lineno, col=node.col_offset,
+                        message=(
+                            f"np.random.{fn.attr}() uses NumPy's legacy "
+                            "global RNG state; use "
+                            "np.random.default_rng(seed) so streams are "
+                            "per-call-site and replayable"))

@@ -48,7 +48,7 @@ def build_graph(args):
     return g
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.network")
     ap.add_argument("--model", default="vgg16",
                     help="vgg16 | resnet50 | any --arch id from "
@@ -104,7 +104,7 @@ def main(argv=None) -> None:
         if args.json:
             with open(args.json, "w") as f:
                 json.dump(stats, f, indent=2)
-        return
+        return 0
 
     sess = NetworkSession(
         graph,
@@ -130,7 +130,8 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(report.as_json(), f, indent=2, default=str)
         print(f"[network] wrote {os.path.abspath(args.json)}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

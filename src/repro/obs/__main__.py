@@ -49,7 +49,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     out = args.out or (args.trace.rsplit(".jsonl", 1)[0].rsplit(
         ".trace", 1)[0] + ".perfetto.json")
     doc = to_perfetto(events)
-    with open(out, "w") as f:
+    with open(out, "w") as f:  # repro: ignore[atomic-write] -- offline perfetto conversion writes a fresh derived file; the trace JSONL itself stays O_APPEND
         json.dump(doc, f)
     print(f"wrote {len(doc['traceEvents'])} events to {out} "
           f"(open at https://ui.perfetto.dev)")

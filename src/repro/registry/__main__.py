@@ -100,7 +100,7 @@ def cmd_evict(store: RegistryStore, args) -> int:
 def cmd_export(store: RegistryStore, args) -> int:
     payload = [r.to_json() for r in store.iter_records()]
     if args.out:
-        with open(args.out, "w") as f:
+        with open(args.out, "w") as f:  # repro: ignore[atomic-write] -- one-shot CLI export to a user-chosen path, not a shared registry file; no concurrent reader exists
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"exported {len(payload)} record(s) to {args.out}")
     else:
