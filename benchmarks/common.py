@@ -1,11 +1,18 @@
-"""Shared benchmark plumbing: timing, CSV rows, JSON artifacts."""
+"""Shared benchmark plumbing: timing, CSV rows, JSON artifacts.
+
+Timing goes through ``repro.calib.timing.time_callable`` — the same
+warmup + best-of-N + ``block_until_ready`` harness the calibration
+layer uses, so benchmark numbers and calibration measurements are
+methodologically identical.
+"""
 
 from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Any, Callable, Dict, List
+
+from repro.calib.timing import time_callable
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments", "bench")
@@ -23,11 +30,17 @@ def rows() -> List[str]:
     return list(_rows)
 
 
-def timed(name: str, fn: Callable[[], Any]) -> Any:
-    t0 = time.perf_counter()
-    out = fn()
-    us = (time.perf_counter() - t0) * 1e6
-    return out, us
+def timed(name: str, fn: Callable[[], Any], warmup: int = 1,
+          repeats: int = 3) -> Any:
+    """(result, best_us) with warmup + best-of-N (device-synchronized).
+
+    The old single-shot version folded jit compile time into its only
+    sample.  Call sites timing an expensive *search* (non-idempotent:
+    a repeat would hit the tuner's cache, not redo the work) pass
+    ``warmup=0, repeats=1`` explicitly to keep single-shot semantics.
+    """
+    res = time_callable(fn, warmup=warmup, repeats=repeats)
+    return res.out, res.best_us
 
 
 def save_json(name: str, payload: Dict) -> str:

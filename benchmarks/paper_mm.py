@@ -33,7 +33,8 @@ def _best_design():
 
 def bench_fig1_fig15():
     wl, df, perm = _best_design()
-    res, us = timed("odyssey", lambda: tune_design(wl, df, perm, cfg=_CFG))
+    res, us = timed("odyssey", lambda: tune_design(wl, df, perm, cfg=_CFG),
+                    warmup=0, repeats=1)
     model, space = res.model, GenomeSpace(wl, df)
     opt = res.latency_cycles
 
@@ -63,9 +64,10 @@ def bench_fig1_fig15():
 
 
 def bench_table2():
-    n_mm, us1 = timed("mm", lambda: len(enumerate_designs(mm_1024())))
+    n_mm, us1 = timed("mm", lambda: len(enumerate_designs(mm_1024())),
+                     warmup=0, repeats=1)
     n_cnn, us2 = timed("cnn", lambda: len(enumerate_designs(
-        cnn_validation())))
+        cnn_validation())), warmup=0, repeats=1)
     emit("table2_mm_designs", us1, f"{n_mm} (paper 18)")
     emit("table2_cnn_designs", us2, f"{n_cnn} (paper 30)")
 
@@ -77,10 +79,10 @@ def bench_table3():
 
     space_d = GenomeSpace(wl, df, divisors_only=True)
     div, us1 = timed("fact", lambda: baselines.divisor_only_evolutionary(
-        space_d, model, _CFG))
+        space_d, model, _CFG), warmup=0, repeats=1)
     space = GenomeSpace(wl, df)
     hyb, us2 = timed("hybrid", lambda: evolve(
-        TilingProblem(space, model), _CFG))
+        TilingProblem(space, model), _CFG), warmup=0, repeats=1)
     ratio = -hyb.best_fitness and (-div.best_fitness / -hyb.best_fitness)
     thr_ratio = (-div.best_fitness) / (-hyb.best_fitness)
     emit("table3_factorization_vs_hybrid", us1 + us2,
@@ -105,7 +107,7 @@ def bench_table4_fig5():
     out = {}
     for obj in ("obj1_comp", "obj2_comm", "obj3_comm_comp"):
         res, us = timed(obj, lambda o=obj: mp_solver.solve(
-            space, model, o, starts=8, sweeps=6))
+            space, model, o, starts=8, sweeps=6), warmup=0, repeats=1)
         lat = model.latency_cycles(res.genome)
         r = model.resources(res.genome)
         out[obj] = {"latency_x": lat / full.latency_cycles,
@@ -176,7 +178,7 @@ def bench_fig7_8_9():
     # fig9: 5-second whole-workload budget, single thread
     rep, us9 = timed("fig9", lambda: tune_workload(
         wl, cfg=EvoConfig(epochs=400, population=64, seed=0),
-        time_budget_s=5.0))
+        time_budget_s=5.0), warmup=0, repeats=1)
     feas = [r for r in rep.results if r.feasible]
     frac = min(r.latency_cycles for r in feas) / \
         min(r.latency_cycles for r in rep.results)

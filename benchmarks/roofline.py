@@ -52,7 +52,10 @@ def bench_kernel_autotune():
     out = {}
     for (M, N, K) in shapes:
         model = TpuMatmulModel(M, N, K)
-        cfg, us = timed("tune", lambda: tune_matmul(M, N, K, seed=1))
+        # single-shot: tune_matmul is lru-cached, a repeat would time
+        # the cache hit instead of the search
+        cfg, us = timed("tune", lambda: tune_matmul(M, N, K, seed=1),
+                        warmup=0, repeats=1)
         tuned = model.mfu((cfg.bm, cfg.bk, cfg.bn, cfg.k_innermost))
         naive = model.mfu((128, 128, 128, True))
         k_outer = model.mfu((cfg.bm, cfg.bk, cfg.bn, False))

@@ -106,6 +106,7 @@ def main() -> None:
     network_demo(store)
     serving_demo()
     tracing_demo()
+    calibration_demo(store)
 
 
 def network_demo(store: RegistryStore) -> None:
@@ -211,6 +212,52 @@ def tracing_demo() -> None:
     print(f"  spans: " + ", ".join(
         f"{k} x{v['count']}" for k, v in sorted(s["spans"].items())))
     print(f"  render: python -m repro.obs to-perfetto {path}")
+
+
+def calibration_demo(store: RegistryStore) -> None:
+    """Ground-truth calibration (DESIGN.md §14): tune → calibrate → re-rank.
+
+    The sweep's top designs are measured as jit-compiled Pallas kernels
+    in interpret mode — the CPU rung of the provenance ladder
+    (measured → interpret → hlo_estimate) — the measured-vs-predicted
+    pairs land in the registry record (schema v4), per-(hardware,
+    family) correction factors are fitted over everything the registry
+    has seen, and the Pareto frontier is re-ranked by corrected
+    latency.  Inspect afterwards with::
+
+        python -m repro.calib report --registry experiments/registry
+        python -m repro.calib drift  --registry experiments/registry
+    """
+    from repro.calib import CalibratedModel, MeasureConfig, calibrate_report
+    from repro.core import mm_validation
+
+    wl = mm_validation()         # 64^3 — small enough to interpret-time
+    session = SearchSession(
+        wl, cfg=EvoConfig(epochs=12, population=32, seed=0),
+        registry=store, session=SessionConfig(executor="serial"))
+    report = session.run()
+    cal = calibrate_report(wl, report, U250, registry=store, k=3,
+                           cfg=MeasureConfig(backend="interpret"))
+
+    backends = ", ".join(sorted({m.backend for m in cal.measurements}))
+    print(f"\ncalibration: {len(cal.measurements)} designs measured "
+          f"({backends}); Spearman(predicted, measured) = "
+          f"{cal.spearman:+.2f}")
+    for m in cal.measurements:
+        err = f"{m.rel_err:+7.0%}" if m.rel_err is not None else "    n/a"
+        print(f"  {m.design:26s} predicted {m.predicted_us:10.1f}us  "
+              f"{m.backend} {m.measured_us:10.1f}us  rel-err {err}")
+
+    model = CalibratedModel(cal.corrections, cal.measurements)
+    frontier = sorted(session.pareto(), key=lambda p: p.latency_cycles)
+    print("  frontier re-ranked by corrected latency:")
+    for p in model.rerank(frontier, U250, "mm")[:4]:
+        c = model.corrected_us(p, U250, "mm")
+        pred = p.latency_cycles / U250.freq_hz * 1e6
+        shown = f"{c:10.1f}us corrected" if c is not None \
+            else f"{pred:10.1f}us model"
+        print(f"    {p.design:26s} {shown}")
+    print(f"  correction factors persisted to {cal.state_file}")
 
 
 # The process-pool engine uses the spawn context (fork is unsafe once jax's

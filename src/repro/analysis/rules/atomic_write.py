@@ -27,7 +27,7 @@ from typing import Iterable, Iterator, Sequence
 from ..core import Finding, Rule
 from ..project import ModuleInfo, Project
 
-DEFAULT_SCOPES = ("repro.registry", "repro.obs")
+DEFAULT_SCOPES = ("repro.registry", "repro.obs", "repro.calib")
 _WRITE_MODES = set("wax")
 
 

@@ -1,0 +1,39 @@
+"""Ground-truth calibration layer (DESIGN.md §14).
+
+Closes the model-vs-reality loop: the top-K genomes of any search are
+re-executed as *timed Pallas kernels* (or deterministic estimates when
+no accelerator is present), measured-vs-predicted pairs are recorded in
+the design registry (schema v4), per-(hardware, family) correction
+factors are fitted from them, and a :class:`CalibratedModel` re-ranks
+Pareto frontiers by corrected latency.
+
+The measurement ladder (``measure.py``) stamps every result with its
+provenance:
+
+    measured       real accelerator wall-clock (warmup + best-of-N)
+    interpret      timed jit-compiled interpret-mode Pallas run (CPU)
+    hlo_estimate   deterministic roofline from compiled-HLO costs
+                   (``launch/hlo_costs``), analytic if jax is absent
+
+Nothing here imports jax at module scope — ``core.engine``'s fork-safe
+import closure must stay jax-free, and benchmarks import the shared
+timer from this package before deciding their pool start method.
+"""
+
+from .timing import TimingResult, time_callable
+from .measure import (Measurement, MeasureConfig, measure_result,
+                      measure_top_k, predicted_us, workload_family)
+from .calibrate import (CalibratedModel, CalibrationState, CorrectionFactor,
+                        DriftAlert, check_drift, factor_key,
+                        fit_corrections, spearman)
+from .session import CalibrationReport, calibrate_report, top_k_results
+
+__all__ = [
+    "TimingResult", "time_callable",
+    "Measurement", "MeasureConfig", "measure_result", "measure_top_k",
+    "predicted_us", "workload_family",
+    "CalibratedModel", "CalibrationState", "CorrectionFactor",
+    "DriftAlert", "check_drift", "factor_key", "fit_corrections",
+    "spearman",
+    "CalibrationReport", "calibrate_report", "top_k_results",
+]

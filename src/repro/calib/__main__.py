@@ -1,0 +1,184 @@
+"""Calibration CLI (DESIGN.md §14).
+
+    python -m repro.calib run    --mm 64 [--mm 32x48x64 ...] [--registry DIR]
+    python -m repro.calib report [--registry DIR]
+    python -m repro.calib drift  [--registry DIR] [--threshold 0.25]
+
+``run`` tunes each matmul (or serves it from the registry), measures
+the top-K genomes through the ladder and records the pairs; ``report``
+summarizes model error by workload family from everything the registry
+has seen; ``drift`` refits fresh correction factors and exits non-zero
+when they disagree with the stored fit beyond the threshold — the CI
+hook for "the model quietly rotted".
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+from typing import Dict, List, Optional
+
+from .calibrate import CalibrationState, check_drift, fit_corrections, \
+    spearman, state_path
+from .measure import MeasureConfig, Measurement
+from .session import calibrate_report, registry_measurements
+
+
+def _parse_mm(spec: str):
+    from repro.core.workloads import matmul
+    dims = [int(t) for t in spec.lower().split("x")]
+    if len(dims) == 1:
+        dims = dims * 3
+    if len(dims) != 3 or any(d < 1 for d in dims):
+        raise argparse.ArgumentTypeError(
+            f"bad --mm spec {spec!r}; expected N or IxJxK")
+    return matmul(*dims)
+
+
+def _store(root: Optional[str]):
+    from repro.registry import RegistryStore
+    return RegistryStore(root)
+
+
+def _family_rows(measurements: List[Measurement]) -> List[Dict]:
+    by_fam: Dict[str, List[Measurement]] = {}
+    for m in measurements:
+        by_fam.setdefault(m.family, []).append(m)
+    rows = []
+    for fam, ms in sorted(by_fam.items()):
+        errs = [m.rel_err for m in ms if m.rel_err is not None]
+        preds = [m.predicted_us for m in ms]
+        meas = [m.measured_us for m in ms]
+        rows.append({
+            "family": fam,
+            "n": len(ms),
+            "backends": ",".join(sorted({m.backend for m in ms})),
+            "median_rel_err": statistics.median(errs) if errs else None,
+            "max_rel_err": max(errs) if errs else None,
+            "spearman": spearman(preds, meas) if len(ms) >= 2 else None,
+        })
+    return rows
+
+
+def _print_report(measurements: List[Measurement],
+                  state: Optional[CalibrationState]) -> None:
+    if not measurements:
+        print("no measurements recorded")
+    else:
+        print(f"{'family':10s} {'n':>4s} {'backends':24s} "
+              f"{'median_err':>10s} {'max_err':>9s} {'spearman':>9s}")
+        for row in _family_rows(measurements):
+            med = f"{row['median_rel_err']:.1%}" \
+                if row["median_rel_err"] is not None else "-"
+            mx = f"{row['max_rel_err']:.1%}" \
+                if row["max_rel_err"] is not None else "-"
+            rho = f"{row['spearman']:.3f}" \
+                if row["spearman"] is not None else "-"
+            print(f"{row['family']:10s} {row['n']:4d} "
+                  f"{row['backends']:24s} {med:>10s} {mx:>9s} {rho:>9s}")
+    if state is not None and state.factors:
+        print(f"correction factors (fitted over "
+              f"{state.n_measurements} measurements):")
+        for key, cf in sorted(state.factors.items()):
+            print(f"  {key:40s} x{cf.factor:.4g}  "
+                  f"(n={cf.n}, log_std={cf.log_std:.3f})")
+
+
+def _cmd_run(args) -> int:
+    from repro.core.evolutionary import EvoConfig
+    from repro.core.hardware import U250
+    from repro.core.tuner import tune_workload
+
+    store = _store(args.registry) if args.registry else None
+    cfg = MeasureConfig(backend=args.backend, repeats=args.repeats)
+    evo = EvoConfig(epochs=args.epochs, seed=args.seed)
+    for wl in args.mm:
+        report = tune_workload(wl, hw=U250, cfg=evo, registry=store)
+        cal = calibrate_report(wl, report, U250, registry=store,
+                               k=args.top_k, cfg=cfg)
+        print(f"{wl.name}: {len(cal.measurements)} measured "
+              f"({'/'.join(sorted({m.backend for m in cal.measurements}))})"
+              f", spearman={cal.spearman:.3f}"
+              + (f", recorded -> {store.root}" if cal.recorded else ""))
+        for m in cal.measurements:
+            err = f" err={m.rel_err:.1%}" if m.rel_err is not None else ""
+            print(f"  {m.design:28s} predicted={m.predicted_us:10.2f}us "
+                  f"measured={m.measured_us:10.2f}us [{m.backend}]{err}")
+    return 0
+
+
+def _cmd_report(args) -> int:
+    store = _store(args.registry)
+    measurements = registry_measurements(store)
+    _print_report(measurements, CalibrationState.load(
+        state_path(store.root)))
+    return 0
+
+
+def _cmd_drift(args) -> int:
+    store = _store(args.registry)
+    stored = CalibrationState.load(state_path(store.root))
+    if stored is None or not stored.factors:
+        print("no stored calibration state; run "
+              "`python -m repro.calib run` first")
+        return 0
+    fresh = fit_corrections(registry_measurements(store))
+    alerts = check_drift(stored.factors, fresh,
+                         threshold=args.threshold, min_n=args.min_n)
+    if not alerts:
+        print(f"no drift beyond {args.threshold:.0%} across "
+              f"{len(fresh)} bucket(s)")
+        return 0
+    print(f"DRIFT: {len(alerts)} bucket(s) moved beyond "
+          f"{args.threshold:.0%}:")
+    for a in alerts:
+        print(f"  {a.key:40s} stored x{a.stored:.4g} -> fresh "
+              f"x{a.fresh:.4g} (ratio {a.ratio:.3f}, n={a.n_fresh})")
+    return 1
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.calib",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    p = sub.add_parser("run", help="tune + measure + record top-K genomes")
+    p.add_argument("--mm", action="append", type=_parse_mm, required=True,
+                   metavar="N|IxJxK", help="matmul workload (repeatable)")
+    p.add_argument("--registry", default=None,
+                   help="registry root (default: no persistence)")
+    p.add_argument("--top-k", type=int, default=4)
+    p.add_argument("--backend", default="auto",
+                   choices=["auto", "measured", "interpret", "hlo_estimate"])
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--epochs", type=int, default=40,
+                   help="evolutionary epochs for the tune stage")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="stream calib spans to this .trace.jsonl")
+    p.set_defaults(fn=_cmd_run)
+
+    p = sub.add_parser("report",
+                       help="model error by family from the registry")
+    p.add_argument("--registry", default=None)
+    p.set_defaults(fn=_cmd_report)
+
+    p = sub.add_parser("drift",
+                       help="refit and compare against the stored factors")
+    p.add_argument("--registry", default=None)
+    p.add_argument("--threshold", type=float, default=0.25,
+                   help="relative factor movement that counts as drift")
+    p.add_argument("--min-n", type=int, default=2,
+                   help="min fresh measurements per bucket")
+    p.set_defaults(fn=_cmd_drift)
+
+    args = ap.parse_args(argv)
+    if getattr(args, "trace", None):
+        from repro import obs
+        obs.configure(args.trace, process_name="calib")
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,289 @@
+"""Correction-factor fit, calibrated re-ranking, drift detection.
+
+The fit is deliberately simple and robust: per (hardware, family,
+backend) bucket the factor is the **geometric mean** of the
+measured/predicted ratios — the maximum-likelihood scale under
+multiplicative (log-normal) error, which is how timing noise and model
+bias actually compose.  ``log_std`` (the log-space spread) rides along
+so drift checks can tell bias shift from noise.
+
+:class:`CalibratedModel` re-ranks a Pareto frontier by corrected
+latency: a point with its own measurement uses it directly, everything
+else is ``predicted x factor``.  With **no** applicable measurements or
+factors the re-rank is the *identity* — same objects, same order — so
+an uncalibrated stack is bit-identical to one that never imported this
+module (gated in ``benchmarks/calibration.py``).
+
+Persistence (``CalibrationState``) is one JSON file beside the registry
+root, written with the same mkstemp + ``os.replace`` pattern the store
+uses — ``repro.calib`` is in the ``atomic-write`` analysis scope.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .measure import Measurement
+
+STATE_VERSION = 1
+STATE_FILENAME = "calibration.json"
+
+# which provenance wins when a bucket has several: real timing beats
+# staged-interpreter timing beats a roofline estimate
+_BACKEND_RANK = {"measured": 0, "interpret": 1, "hlo_estimate": 2}
+
+
+def spearman(xs: Sequence[float], ys: Sequence[float]) -> float:
+    """Spearman rank correlation with average ranks for ties."""
+    if len(xs) != len(ys):
+        raise ValueError(f"length mismatch: {len(xs)} vs {len(ys)}")
+    n = len(xs)
+    if n < 2:
+        return 0.0
+
+    def ranks(vals: Sequence[float]) -> List[float]:
+        order = sorted(range(n), key=lambda i: vals[i])
+        r = [0.0] * n
+        i = 0
+        while i < n:
+            j = i
+            while j + 1 < n and vals[order[j + 1]] == vals[order[i]]:
+                j += 1
+            avg = (i + j) / 2.0 + 1.0
+            for k in range(i, j + 1):
+                r[order[k]] = avg
+            i = j + 1
+        return r
+
+    rx, ry = ranks(xs), ranks(ys)
+    mx = sum(rx) / n
+    my = sum(ry) / n
+    cov = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    vx = sum((a - mx) ** 2 for a in rx)
+    vy = sum((b - my) ** 2 for b in ry)
+    if vx == 0 or vy == 0:
+        return 0.0
+    return cov / math.sqrt(vx * vy)
+
+
+def factor_key(hardware: str, family: str, backend: str) -> str:
+    return f"{hardware}/{family}/{backend}"
+
+
+@dataclasses.dataclass
+class CorrectionFactor:
+    """measured ~= factor x predicted for one (hw, family, backend)."""
+
+    hardware: str
+    family: str
+    backend: str
+    factor: float                  # geometric mean of measured/predicted
+    log_std: float                 # spread of log(measured/predicted)
+    n: int
+    fitted_at: float = 0.0
+
+    @property
+    def key(self) -> str:
+        return factor_key(self.hardware, self.family, self.backend)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, payload: Dict) -> "CorrectionFactor":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in payload.items() if k in fields})
+
+
+def fit_corrections(measurements: Sequence[Measurement],
+                    now: Optional[float] = None
+                    ) -> Dict[str, CorrectionFactor]:
+    """Per-(hardware, family, backend) geometric-mean factors."""
+    logs: Dict[Tuple[str, str, str], List[float]] = {}
+    for m in measurements:
+        if m.measured_us <= 0 or m.predicted_us <= 0:
+            continue
+        key = (m.hardware, m.family, m.backend)
+        logs.setdefault(key, []).append(
+            math.log(m.measured_us / m.predicted_us))
+    fitted_at = time.time() if now is None else now
+    out: Dict[str, CorrectionFactor] = {}
+    for (hw, fam, backend), ls in sorted(logs.items()):
+        mean = sum(ls) / len(ls)
+        var = sum((v - mean) ** 2 for v in ls) / len(ls)
+        cf = CorrectionFactor(hardware=hw, family=fam, backend=backend,
+                              factor=math.exp(mean),
+                              log_std=math.sqrt(var), n=len(ls),
+                              fitted_at=fitted_at)
+        out[cf.key] = cf
+    return out
+
+
+@dataclasses.dataclass
+class CalibrationState:
+    """The persisted fit: every factor, plus fit provenance."""
+
+    factors: Dict[str, CorrectionFactor] = dataclasses.field(
+        default_factory=dict)
+    n_measurements: int = 0
+    fitted_at: float = 0.0
+    version: int = STATE_VERSION
+
+    def to_json(self) -> Dict:
+        return {"version": self.version,
+                "fitted_at": self.fitted_at,
+                "n_measurements": self.n_measurements,
+                "factors": {k: f.to_json()
+                            for k, f in sorted(self.factors.items())}}
+
+    @classmethod
+    def from_json(cls, payload: Dict) -> "CalibrationState":
+        return cls(
+            factors={k: CorrectionFactor.from_json(v)
+                     for k, v in payload.get("factors", {}).items()},
+            n_measurements=int(payload.get("n_measurements", 0)),
+            fitted_at=float(payload.get("fitted_at", 0.0)),
+            version=int(payload.get("version", STATE_VERSION)))
+
+    # -- persistence (atomic: shared file beside the registry root) ----
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> Optional["CalibrationState"]:
+        try:
+            with open(path) as f:
+                return cls.from_json(json.load(f))
+        except (FileNotFoundError, json.JSONDecodeError, ValueError,
+                TypeError):
+            return None
+
+
+def state_path(registry_root: str) -> str:
+    return os.path.join(registry_root, STATE_FILENAME)
+
+
+def _genome_key(genome: Dict) -> Tuple:
+    return tuple(sorted((l, tuple(t)) for l, t in genome.items()))
+
+
+class CalibratedModel:
+    """Re-ranks frontiers by measured/corrected latency.
+
+    Wraps a set of fitted :class:`CorrectionFactor`s (usually a
+    ``CalibrationState.factors`` dict) plus optional point measurements.
+    """
+
+    def __init__(self, factors: Optional[Dict[str, CorrectionFactor]] = None,
+                 measurements: Sequence[Measurement] = ()):
+        self.factors = dict(factors or {})
+        # best measurement per (design label, genome): highest-rank
+        # backend wins, then most recent
+        self._by_point: Dict[Tuple, Measurement] = {}
+        for m in measurements:
+            key = (m.design, _genome_key(m.genome))
+            cur = self._by_point.get(key)
+            if cur is None or \
+                    (_BACKEND_RANK.get(m.backend, 9),
+                     -m.measured_at) < (_BACKEND_RANK.get(cur.backend, 9),
+                                        -cur.measured_at):
+                self._by_point[key] = m
+
+    def factor_for(self, hardware: str,
+                   family: str) -> Optional[CorrectionFactor]:
+        """The bucket's best-provenance factor, if any was fitted."""
+        best: Optional[CorrectionFactor] = None
+        for backend in ("measured", "interpret", "hlo_estimate"):
+            cf = self.factors.get(factor_key(hardware, family, backend))
+            if cf is not None:
+                best = cf
+                break
+        return best
+
+    def corrected_us(self, point, hw, family: str) -> Optional[float]:
+        """Corrected latency in µs for one ``ParetoPoint``-like object,
+        or None when nothing applies (no measurement, no factor)."""
+        m = self._by_point.get((point.design, _genome_key(point.tiling)))
+        if m is not None:
+            return m.measured_us
+        cf = self.factor_for(hw.name, family)
+        if cf is None:
+            return None
+        return point.latency_cycles / hw.freq_hz * 1e6 * cf.factor
+
+    def rerank(self, points: Sequence, hw, family: str) -> List:
+        """Frontier sorted by corrected latency.
+
+        Identity (same objects, same order) when no measurement or
+        factor applies to any point — an uncalibrated re-rank must be
+        bit-identical to never re-ranking.
+        """
+        corrected = [self.corrected_us(p, hw, family) for p in points]
+        if all(c is None for c in corrected):
+            return list(points)
+        keyed = [(c if c is not None
+                  else p.latency_cycles / hw.freq_hz * 1e6, i, p)
+                 for i, (p, c) in enumerate(zip(points, corrected))]
+        return [p for _, _, p in sorted(keyed, key=lambda t: (t[0], t[1]))]
+
+
+@dataclasses.dataclass
+class DriftAlert:
+    """A stored factor that fresh measurements no longer support."""
+
+    key: str
+    stored: float
+    fresh: float
+    ratio: float                   # fresh / stored
+    n_fresh: int
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def check_drift(stored: Dict[str, CorrectionFactor],
+                fresh: Dict[str, CorrectionFactor],
+                threshold: float = 0.25,
+                min_n: int = 2) -> List[DriftAlert]:
+    """Buckets where the refitted factor moved more than ``threshold``.
+
+    The rule is symmetric in log space: ``|log(fresh/stored)| >
+    log(1 + threshold)`` — a factor that halved drifts exactly as much
+    as one that doubled.  Buckets with fewer than ``min_n`` fresh
+    points are skipped (one noisy timing is not drift).
+    """
+    if threshold <= 0:
+        raise ValueError(f"threshold must be > 0, got {threshold}")
+    alerts: List[DriftAlert] = []
+    bound = math.log(1.0 + threshold)
+    for key, cf in sorted(fresh.items()):
+        old = stored.get(key)
+        if old is None or cf.n < min_n:
+            continue
+        if old.factor <= 0 or cf.factor <= 0:
+            continue
+        if abs(math.log(cf.factor / old.factor)) > bound:
+            alerts.append(DriftAlert(key=key, stored=old.factor,
+                                     fresh=cf.factor,
+                                     ratio=cf.factor / old.factor,
+                                     n_fresh=cf.n))
+    return alerts

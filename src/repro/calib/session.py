@@ -1,0 +1,188 @@
+"""Orchestration: search report -> measurements -> registry -> fit.
+
+``calibrate_report`` is the one entry point the engine hook, the CLI
+and the benchmarks all share: take a finished ``TuneReport``, measure
+its top-K designs through the ladder, append the measured-vs-predicted
+pairs to the workload's registry record (schema v4), refit the
+per-(hardware, family) correction factors over *everything* the
+registry has seen, and persist the fit beside the registry root.
+
+``calibrate_session`` adapts it to ``SearchSession``'s post-run
+calibration hook (``SearchSession(..., calibration=...)``) — the engine
+itself stays jax-free and never imports this package; the hook is
+injected by the caller who opted in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.hardware import HardwareProfile
+from repro.core.workloads import Workload
+from repro.obs import get_tracer
+
+from .calibrate import (CalibrationState, CorrectionFactor, fit_corrections,
+                        spearman, state_path)
+from .measure import Measurement, MeasureConfig, measure_top_k
+
+# registry records keep a bounded measurement history: enough for a
+# stable fit, bounded so a hot workload cannot grow its record forever
+MAX_RECORD_MEASUREMENTS = 64
+
+
+def top_k_results(report, k: int = 4) -> List:
+    """The report's K best designs, worth spending real timing on.
+
+    Feasible, non-aborted results ranked by model latency; aborted
+    searches were cut *because* they are dominated and infeasible
+    genomes are not buildable kernels, so neither is measured (unless
+    nothing else exists).
+    """
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    pool = [r for r in report.results
+            if r.feasible and not getattr(r, "aborted", False)]
+    if not pool:
+        pool = [r for r in report.results
+                if not getattr(r, "aborted", False)] or list(report.results)
+    return sorted(pool, key=lambda r: r.latency_cycles)[:k]
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """What one calibration pass produced."""
+
+    workload: str
+    hardware: str
+    measurements: List[Measurement]
+    corrections: Dict[str, CorrectionFactor]
+    spearman: float                # predicted-vs-measured over this pass
+    state_file: Optional[str] = None
+    recorded: bool = False         # measurements persisted to the registry
+
+    def summary(self) -> Dict:
+        return {
+            "workload": self.workload,
+            "hardware": self.hardware,
+            "n_measurements": len(self.measurements),
+            "backends": sorted({m.backend for m in self.measurements}),
+            "spearman": self.spearman,
+            "corrections": {k: f.factor
+                            for k, f in sorted(self.corrections.items())},
+            "state_file": self.state_file,
+            "recorded": self.recorded,
+        }
+
+
+def registry_measurements(store) -> List[Measurement]:
+    """Every measurement recorded in the registry, oldest first."""
+    out: List[Measurement] = []
+    for rec in store.iter_records():
+        for payload in getattr(rec, "measurements", None) or []:
+            try:
+                out.append(Measurement.from_json(payload))
+            except (TypeError, ValueError):
+                continue           # records are on-disk data: skip, not die
+    out.sort(key=lambda m: m.measured_at)
+    return out
+
+
+def _record_measurements(store, fingerprint,
+                         measurements: Sequence[Measurement],
+                         best_design: Optional[str]) -> bool:
+    """Append this pass's pairs to the workload's record (schema v4)."""
+    rec = store.get(fingerprint)
+    if rec is None:
+        return False
+    history = list(rec.measurements) + [m.to_json() for m in measurements]
+    rec.measurements = history[-MAX_RECORD_MEASUREMENTS:]
+    ranked = sorted(
+        measurements,
+        key=lambda m: (m.design != best_design, m.measured_us))
+    if ranked:
+        top = ranked[0]
+        rec.measured_us = top.measured_us
+        rec.measure_backend = top.backend
+        rec.rel_err = top.rel_err
+    store.put(rec)
+    return True
+
+
+def calibrate_report(wl: Workload, report, hw: HardwareProfile,
+                     registry=None, k: int = 4,
+                     cfg: Optional[MeasureConfig] = None,
+                     fingerprint=None,
+                     state_file: Optional[str] = None) -> CalibrationReport:
+    """Measure ``report``'s top-K, record, refit, persist.
+
+    Without a ``registry`` the pass still measures and fits (from this
+    pass's pairs alone) but persists nothing unless ``state_file`` is
+    given explicitly.
+    """
+    tr = get_tracer()
+    with tr.span("calib.session", cat="calib", workload=wl.name,
+                 k=k, designs=len(report.results)):
+        picked = top_k_results(report, k=k)
+        measurements = measure_top_k(wl, picked, hw, cfg)
+
+        recorded = False
+        if registry is not None and measurements:
+            if fingerprint is None:
+                from repro.registry import workload_fingerprint
+                fingerprint = workload_fingerprint(wl, hw)
+            recorded = _record_measurements(store=registry,
+                                            fingerprint=fingerprint,
+                                            measurements=measurements,
+                                            best_design=report.best.design
+                                            .label())
+
+        # fit over everything ever measured, not just this pass — the
+        # factor is a property of (hardware, family), not of one run
+        pool = registry_measurements(registry) if registry is not None \
+            else list(measurements)
+        if not pool:
+            pool = list(measurements)
+        corrections = fit_corrections(pool)
+
+        path = state_file
+        if path is None and registry is not None:
+            path = state_path(registry.root)
+        if path is not None and corrections:
+            CalibrationState(factors=corrections,
+                             n_measurements=len(pool)).save(path)
+
+        rho = spearman([m.predicted_us for m in measurements],
+                       [m.measured_us for m in measurements]) \
+            if len(measurements) >= 2 else 0.0
+        if tr.enabled:
+            tr.instant("calib.fit", cat="calib", workload=wl.name,
+                       n=len(measurements), spearman=rho,
+                       buckets=len(corrections))
+    return CalibrationReport(workload=wl.name, hardware=hw.name,
+                             measurements=measurements,
+                             corrections=corrections, spearman=rho,
+                             state_file=path, recorded=recorded)
+
+
+def calibrate_session(session, k: int = 4,
+                      cfg: Optional[MeasureConfig] = None
+                      ) -> CalibrationReport:
+    """Adapter for ``SearchSession(..., calibration=...)``.
+
+    Usage::
+
+        from repro.calib.session import calibrate_session
+        s = SearchSession(wl, registry=store, calibration=calibrate_session)
+        s.run()                      # sweep, then measure+record top-K
+        s.calibration_report         # the CalibrationReport
+
+    The engine invokes the hook with the session after a *non-cached*
+    run; the result is attached as ``session.calibration_report``.
+    """
+    registry = getattr(session, "registry", None)
+    fp = session._fingerprint() if registry is not None else None
+    rep = calibrate_report(session.wl, session.report, session.hw,
+                           registry=registry, k=k, cfg=cfg, fingerprint=fp)
+    session.calibration_report = rep
+    return rep

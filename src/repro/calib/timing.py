@@ -1,0 +1,73 @@
+"""Shared wall-clock timing harness: warmup + best-of-N.
+
+One-shot timing of a jitted callable measures the *compile*, not the
+kernel — the bug ``benchmarks/common.timed`` had before it was rebuilt
+on this harness.  ``time_callable`` runs ``warmup`` untimed calls first
+(the first one is reported separately as the compile/warmup cost), then
+``repeats`` timed calls and reports the best — the standard estimator
+for a quantity whose noise is strictly additive.
+
+Device work is synchronized by duck-typing: any output exposing
+``block_until_ready`` (a jax array, or a pytree of them via
+``jax.block_until_ready`` at the call site) is awaited before the clock
+stops.  No jax import here — the module must stay importable in
+fork-safe, jax-free processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, List, Optional
+
+
+@dataclasses.dataclass
+class TimingResult:
+    """Best-of-N timing of one callable."""
+
+    best_us: float
+    mean_us: float
+    runs_us: List[float]
+    warmup_us: Optional[float]     # first warmup call (jit: ~compile time)
+    repeats: int
+    out: Any = None                # last call's output
+
+    def to_json(self) -> dict:
+        return {"best_us": self.best_us, "mean_us": self.mean_us,
+                "runs_us": list(self.runs_us), "warmup_us": self.warmup_us,
+                "repeats": self.repeats}
+
+
+def _sync(out: Any) -> Any:
+    """Wait for async device work (duck-typed ``block_until_ready``)."""
+    wait = getattr(out, "block_until_ready", None)
+    if callable(wait):
+        return wait()
+    return out
+
+
+def time_callable(fn: Callable[[], Any], warmup: int = 1,
+                  repeats: int = 3) -> TimingResult:
+    """Time ``fn`` with ``warmup`` untimed calls then best-of-``repeats``.
+
+    ``warmup=0, repeats=1`` degenerates to single-shot timing — the
+    right mode for expensive non-idempotent calls (a whole search),
+    where repetition would time a cache hit instead of the work.
+    """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    warmup_us: Optional[float] = None
+    out: Any = None
+    for i in range(warmup):
+        t0 = time.perf_counter()
+        out = _sync(fn())
+        if i == 0:
+            warmup_us = (time.perf_counter() - t0) * 1e6
+    runs: List[float] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = _sync(fn())
+        runs.append((time.perf_counter() - t0) * 1e6)
+    return TimingResult(best_us=min(runs), mean_us=sum(runs) / len(runs),
+                        runs_us=runs, warmup_us=warmup_us,
+                        repeats=repeats, out=out)

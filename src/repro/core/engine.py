@@ -245,7 +245,8 @@ class SearchSession:
                  transfer: bool = True,
                  transfer_k: int = 3,
                  transfer_max_distance: float = 4.0,
-                 refresh: bool = False):
+                 refresh: bool = False,
+                 calibration=None):
         self.wl = wl
         self.hw = hw
         self.designs: List[Design] = list(designs or enumerate_designs(wl))
@@ -276,6 +277,12 @@ class SearchSession:
         # is still recorded; put()'s keep-best merge guarantees a cheap
         # refresh can't clobber a better cached winner.
         self.refresh = refresh
+        # post-run calibration hook (repro.calib.session.calibrate_session
+        # or any callable taking the session).  Injected, never imported:
+        # this module's import closure must stay jax-free (fork safety),
+        # and the disabled cost is a single ``is not None`` check.
+        self.calibration = calibration
+        self.calibration_report = None
         self.report = None
         self._incumbent: Optional[float] = None
         self._seeds: Dict = {}
@@ -567,9 +574,31 @@ class SearchSession:
                                      engine=resolved_engine_name(self.cfg))
             if self.registry is not None:
                 self._record()
+            if self.calibration is not None:
+                # after the sweep is recorded: measurement can never
+                # perturb the search (gated in benchmarks/calibration.py)
+                self.calibration(self)
             return self.report
 
     # -- reporting ---------------------------------------------------------
+    def top_k(self, k: int = 4) -> List:
+        """The last run's K best designs — what calibration measures.
+
+        Feasible, non-aborted results by model latency; falls back to
+        whatever exists when nothing qualifies (a report must always
+        yield *something* to measure).
+        """
+        if self.report is None:
+            raise RuntimeError("call run() first")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        pool = [r for r in self.report.results
+                if r.feasible and not r.aborted]
+        if not pool:
+            pool = [r for r in self.report.results if not r.aborted] \
+                or list(self.report.results)
+        return sorted(pool, key=lambda r: r.latency_cycles)[:k]
+
     def pareto(self) -> List[ParetoPoint]:
         """The (latency, DSP, BRAM) frontier of the last ``run()``."""
         if self.report is None:

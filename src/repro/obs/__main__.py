@@ -3,9 +3,12 @@
     python -m repro.obs summarize  RUN.trace.jsonl
     python -m repro.obs to-perfetto RUN.trace.jsonl [--out RUN.perfetto.json]
 
-``summarize`` prints per-span timing (count/total/mean/p95), instant and
-counter inventories; ``to-perfetto`` writes the Chrome trace-event JSON
-that https://ui.perfetto.dev (or chrome://tracing) loads directly.
+``summarize`` prints per-span timing (count/total/mean/p95), a
+per-category duration breakdown (``search`` vs ``calib`` vs ``serve``
+time side by side), instant counts and counter digests
+(min/max/count/last per series); ``to-perfetto`` writes the Chrome
+trace-event JSON that https://ui.perfetto.dev (or chrome://tracing)
+loads directly.
 """
 
 from __future__ import annotations

@@ -84,11 +84,13 @@ def to_perfetto(events: Iterable[Dict]) -> Dict:
 
 
 def summarize(events: Iterable[Dict]) -> Dict:
-    """Aggregate view of a trace: per-span-name timing, counter ranges,
-    instant counts, process inventory."""
+    """Aggregate view of a trace: per-span-name timing, a per-category
+    duration breakdown (where did the time go: search vs calib vs
+    serve), counter series digests, instant counts, process inventory."""
     spans: Dict[str, List[float]] = {}
+    categories: Dict[str, List[float]] = {}
     instants: Dict[str, int] = {}
-    counters: Dict[str, Dict[str, Tuple[float, float]]] = {}
+    counters: Dict[str, Dict[str, List[float]]] = {}
     pids = set()
     t_lo: Optional[float] = None
     t_hi: Optional[float] = None
@@ -101,8 +103,9 @@ def summarize(events: Iterable[Dict]) -> Dict:
             t_hi = end if t_hi is None else max(t_hi, end)
         kind = ev.get("ev")
         if kind == "span":
-            spans.setdefault(ev.get("name", "?"), []).append(
-                ev.get("dur", 0.0))
+            dur = ev.get("dur", 0.0)
+            spans.setdefault(ev.get("name", "?"), []).append(dur)
+            categories.setdefault(ev.get("cat") or "span", []).append(dur)
         elif kind == "instant":
             name = ev.get("name", "?")
             instants[name] = instants.get(name, 0) + 1
@@ -113,8 +116,15 @@ def summarize(events: Iterable[Dict]) -> Dict:
                     v = float(val)
                 except (TypeError, ValueError):
                     continue
-                lo, hi = series.get(key, (v, v))
-                series[key] = (min(lo, v), max(hi, v))
+                # [min, max, count, last] — enough for a text digest
+                s = series.get(key)
+                if s is None:
+                    series[key] = [v, v, 1, v]
+                else:
+                    s[0] = min(s[0], v)
+                    s[1] = max(s[1], v)
+                    s[2] += 1
+                    s[3] = v
     return {
         "wall_us": (t_hi - t_lo) if t_lo is not None else 0.0,
         "processes": sorted(pids),
@@ -124,9 +134,14 @@ def summarize(events: Iterable[Dict]) -> Dict:
                    "p95_us": percentile(durs, 0.95),
                    "max_us": max(durs)}
             for name, durs in spans.items()},
+        "categories": {
+            cat: {"count": len(durs), "total_us": sum(durs),
+                  "mean_us": sum(durs) / len(durs)}
+            for cat, durs in categories.items()},
         "instants": instants,
-        "counters": {name: {k: {"min": lo, "max": hi}
-                            for k, (lo, hi) in series.items()}
+        "counters": {name: {k: {"min": lo, "max": hi,
+                                "count": int(cnt), "last": last}
+                            for k, (lo, hi, cnt, last) in series.items()}
                      for name, series in counters.items()},
     }
 
@@ -139,6 +154,12 @@ def format_summary(summary: Dict, corrupt: int = 0) -> str:
              f"{', ...' if len(summary['processes']) > 8 else ''})"]
     if corrupt:
         lines.append(f"!! {corrupt} corrupt line(s) skipped")
+    cats = summary.get("categories") or {}
+    if cats:
+        by_cat = sorted(cats.items(), key=lambda kv: -kv[1]["total_us"])
+        lines.append("by category: " + "  ".join(
+            f"{cat}={c['total_us'] / 1e6:.3f}s/{c['count']}"
+            for cat, c in by_cat))
     if summary["spans"]:
         lines.append(f"{'span':32s} {'count':>7s} {'total':>10s} "
                      f"{'mean':>10s} {'p95':>10s}")
@@ -154,7 +175,10 @@ def format_summary(summary: Dict, corrupt: int = 0) -> str:
                          for k, v in sorted(summary["instants"].items()))
         lines.append(f"instants: {inst}")
     for name, series in sorted(summary["counters"].items()):
-        rng = ", ".join(f"{k}[{v['min']:g}..{v['max']:g}]"
-                        for k, v in sorted(series.items()))
+        rng = ", ".join(
+            f"{k}[{v['min']:g}..{v['max']:g}]"
+            + (f" n={v['count']} last={v['last']:g}"
+               if "count" in v else "")
+            for k, v in sorted(series.items()))
         lines.append(f"counter {name}: {rng}")
     return "\n".join(lines)

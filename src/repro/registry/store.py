@@ -30,7 +30,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Tuple
 from .fingerprint import Fingerprint
 from repro.obs import get_metrics, get_tracer
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 DEFAULT_ROOT_ENV = "REPRO_REGISTRY_DIR"
 
@@ -62,8 +62,20 @@ def _migrate_v2(rec: Dict) -> Dict:
     return rec
 
 
+def _migrate_v3(rec: Dict) -> Dict:
+    # v3 records predate ground-truth calibration (repro.calib): no
+    # measured-vs-predicted history, no measurement provenance.
+    rec.setdefault("measurements", [])
+    rec.setdefault("measured_us", None)
+    rec.setdefault("measure_backend", "")
+    rec.setdefault("rel_err", None)
+    rec["schema_version"] = 4
+    return rec
+
+
 _MIGRATIONS: Dict[int, Callable[[Dict], Dict]] = {1: _migrate_v1,
-                                                  2: _migrate_v2}
+                                                  2: _migrate_v2,
+                                                  3: _migrate_v3}
 
 
 @dataclasses.dataclass
@@ -87,6 +99,13 @@ class Record:
     engine: str = "numpy"          # evaluator provenance ("numpy"|"jax"|
     #                                "object"); lets measured-vs-predicted
     #                                analysis stratify by evaluator
+    # ground-truth calibration (repro.calib, DESIGN.md §14): the full
+    # measured-vs-predicted pair history plus a summary of the best
+    # design's latest measurement with its ladder provenance
+    measurements: List[Dict] = dataclasses.field(default_factory=list)
+    measured_us: Optional[float] = None
+    measure_backend: str = ""      # "measured"|"interpret"|"hlo_estimate"
+    rel_err: Optional[float] = None
     created_at: float = 0.0
     updated_at: float = 0.0
     hits: int = 0
@@ -209,6 +228,12 @@ class RegistryStore:
         is accepted rather than locked.)  Live hit counts stay in the
         ``.hits`` sidecar (see :meth:`touch`), so they survive the
         rewrite; the record's own ``hits`` field is written as 0.
+
+        Ground truth survives the merge **regardless of which side
+        wins**: the measurement histories of both records are unioned
+        (deduplicated, bounded), and a winner without its own
+        measurement summary inherits the loser's — a re-tune must never
+        erase what was actually measured.
         """
         t0 = time.perf_counter()
         with get_tracer().span("registry.put", cat="registry",
@@ -216,16 +241,22 @@ class RegistryStore:
                                workload=rec.workload):
             now = time.time()
             existing = self.get(rec.fingerprint)
+            measurements = _merge_measurements(
+                existing.measurements if existing else [], rec.measurements)
             if existing is not None and keep_best and \
                     _latency(existing.best) < _latency(rec.best):
+                winner, loser = existing, rec
                 rec = dataclasses.replace(
                     existing, updated_at=now, hits=0,
                     evals=max(existing.evals, rec.evals))
             else:
+                winner, loser = rec, existing
                 rec = dataclasses.replace(
                     rec, schema_version=SCHEMA_VERSION,
                     created_at=existing.created_at if existing else now,
                     hits=0, updated_at=now)
+            rec = dataclasses.replace(rec, measurements=measurements,
+                                      **_measure_summary(winner, loser))
             self._write(rec)
         get_metrics().observe("registry.put_s", time.perf_counter() - t0)
         get_metrics().counter("registry.puts")
@@ -323,3 +354,44 @@ def _latency(best: Dict) -> float:
         if key in best:
             return float(best[key])
     return float("inf")
+
+
+# bounded measurement history per record (matches repro.calib's cap)
+MAX_MEASUREMENTS = 64
+
+
+def _merge_measurements(a: List[Dict], b: List[Dict],
+                        cap: int = MAX_MEASUREMENTS) -> List[Dict]:
+    """Union of two measurement histories, deduplicated, newest-biased.
+
+    Order is preserved (a then b) so the cap drops the *oldest*
+    entries; duplicates (identical pairs re-put by a merge cycle)
+    collapse to one.
+    """
+    seen = set()
+    out: List[Dict] = []
+    for m in list(a or []) + list(b or []):
+        try:
+            key = json.dumps(m, sort_keys=True)
+        except (TypeError, ValueError):
+            continue
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(m)
+    return out[-cap:]
+
+
+def _measure_summary(winner: Optional[Record],
+                     loser: Optional[Record]) -> Dict:
+    """Merge the measurement-summary fields: the surviving record keeps
+    its own summary, inheriting the losing side's when it has none."""
+    out: Dict = {}
+    for rec in (winner, loser):
+        if rec is None:
+            continue
+        if rec.measured_us is not None:
+            return {"measured_us": rec.measured_us,
+                    "measure_backend": rec.measure_backend,
+                    "rel_err": rec.rel_err}
+    return out

@@ -312,6 +312,38 @@ def test_perfetto_from_real_serving_run(tmp_path):
     assert "serve.decode_tick" in text
 
 
+def test_summarize_aggregates_counters_and_categories(tmp_path):
+    """Counter series get min/max/count/last digests and spans roll up
+    per category, so `calib` time is visible next to `search`/`serve`."""
+    path = _trace_file(tmp_path)
+    tr = obs.configure(path, process_name="t")
+    with tr.span("design.evolve", cat="search"):
+        pass
+    with tr.span("calib.measure", cat="calib"):
+        with tr.span("calib.run", cat="calib"):
+            pass
+    tr.counter("calibration", measured=0, interpret=1)
+    tr.counter("calibration", measured=2, interpret=1)
+    tr.counter("calibration", measured=3, interpret=5)
+    obs.disable()
+    events, corrupt = obs.load_events(path)
+    assert corrupt == 0
+    summary = obs.summarize(events)
+    cats = summary["categories"]
+    assert cats["search"]["count"] == 1 and cats["calib"]["count"] == 2
+    assert cats["calib"]["total_us"] >= cats["calib"]["mean_us"] >= 0
+    series = summary["counters"]["calibration"]
+    assert series["measured"] == {"min": 0.0, "max": 3.0, "count": 3,
+                                  "last": 3.0}
+    assert series["interpret"]["count"] == 3
+    assert series["interpret"]["last"] == 5.0
+    text = obs.format_summary(summary)
+    assert "by category:" in text and "calib=" in text and "search=" in text
+    assert "n=3 last=3" in text
+    # the perfetto export still renders the same stream
+    _assert_perfetto_valid(obs.to_perfetto(events))
+
+
 # --------------------------------------------------------------------- #
 # serving stats (satellite 1)
 # --------------------------------------------------------------------- #

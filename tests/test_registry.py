@@ -142,6 +142,65 @@ def test_future_schema_record_is_quarantined(store):
     assert os.path.exists(path + ".corrupt")
 
 
+def test_v2_record_migrates_full_chain_in_one_get(store):
+    """A v2 payload walks v2->v3->v4 on a single read: engine default
+    from the v3 step, empty measurement history from the v4 step."""
+    rec = make_record()
+    payload = rec.to_json()
+    payload["schema_version"] = 2
+    for field in ("engine", "measurements", "measured_us",
+                  "measure_backend", "rel_err"):
+        del payload[field]                          # v2 predates all four
+    path = store._path(rec.fingerprint)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    got = store.get(rec.fingerprint)
+    assert got is not None
+    assert got.schema_version == SCHEMA_VERSION == 4
+    assert got.engine == "numpy"                    # v2->v3
+    assert got.measurements == []                   # v3->v4
+    assert got.measured_us is None and got.measure_backend == ""
+    assert got.rel_err is None
+
+
+def _measurement(us=42.0, backend="interpret"):
+    return {"workload": "wl", "family": "mm", "hardware": "u250",
+            "design": "[i,j] <[i,j],k>", "genome": {"i": [1, 2, 4]},
+            "predicted_us": 40.0, "measured_us": us, "backend": backend,
+            "rel_err": abs(us - 40.0) / us, "measured_at": 1.0}
+
+
+def test_keep_best_merge_preserves_measurements(store):
+    """Ground truth survives the merge in both directions: a better
+    unmeasured record must not drop the loser's measurement history or
+    its measured_us summary, and vice versa."""
+    measured = make_record(latency=80.0, measurements=[_measurement()],
+                           measured_us=42.0, measure_backend="interpret",
+                           rel_err=0.05)
+    store.put(measured)
+    merged = store.put(make_record(latency=50.0))   # better, unmeasured
+    assert merged.best["latency_cycles"] == 50.0    # newcomer wins...
+    assert merged.measurements == [_measurement()]  # ...truth survives
+    assert merged.measured_us == 42.0
+    assert merged.measure_backend == "interpret"
+    assert merged.rel_err == 0.05
+    # losing *incoming* record: its new measurements union in, the
+    # incumbent keeps its own summary
+    newer = _measurement(us=55.0, backend="hlo_estimate")
+    worse = make_record(latency=90.0, measurements=[newer],
+                        measured_us=55.0, measure_backend="hlo_estimate")
+    merged2 = store.put(worse)
+    assert merged2.best["latency_cycles"] == 50.0   # incumbent survives
+    assert merged2.measurements == [_measurement(), newer]
+    assert merged2.measured_us == 42.0              # own summary kept
+    # duplicates collapse, disk round-trip keeps provenance intact
+    store.put(worse)
+    again = store.get(measured.fingerprint)
+    assert again.measurements == [_measurement(), newer]
+    assert again.schema_version == SCHEMA_VERSION
+
+
 def test_evict_and_lru_trim(store):
     for i in range(4):
         store.put(make_record(digest=f"{i:02d}" * 32, workload=f"wl{i}"))
