@@ -1,0 +1,181 @@
+"""Chaos benchmark — the DESIGN.md §15 recovery gates, asserted for CI.
+
+Three gates (ISSUE 10 acceptance criteria):
+
+  1. **Crash/hang/corruption recovery**: a seeded :func:`chaos_plan`
+     (>= 1 worker crash, >= 1 worker hang, >= 1 corrupt registry write)
+     injected into a process-pool matmul sweep completes, rebuilds the
+     pool, retries the lost designs, and lands on the **bit-identical**
+     winner and per-design results of the fault-free run.  The corrupt
+     record is quarantined (``*.corrupt``), never served, and a clean
+     re-record restores the cache.
+  2. **Disabled-injection overhead**: with no plan active, a
+     ``fault_point`` is one module-global check — gated at < 2% of a
+     sweep's wall-clock for the sweep's own check count — and a sweep
+     under an *empty* activated plan is bit-identical to no plan at all.
+  3. **Overload policy**: a bursty Poisson trace with per-request
+     deadlines against a 1-slot engine with a shallow admission
+     watermark sheds and times out without deadlock, and every request
+     is accounted in ``ServeStats`` exactly once.
+
+Artifact: ``experiments/bench/chaos.json``.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro import faults
+from repro.core.engine import SearchSession, SessionConfig
+from repro.core.evolutionary import EvoConfig
+from repro.core.hardware import U250
+from repro.core.workloads import matmul
+from repro.faults import FaultPlan, chaos_plan, injected
+from repro.registry import RegistryStore, workload_fingerprint
+
+from .common import emit, save_json
+
+_EVO = EvoConfig(epochs=6, population=16, parents=8, elites=2, seed=0)
+
+
+def _pool_kw():
+    # fork is fast but unsafe once jax is loaded (a full benchmarks.run
+    # may execute the TPU benches first in this process) — decide late
+    import sys
+    return dict(executor="process", max_workers=2, early_abort=False,
+                hang_timeout_s=3.0,
+                start_method="fork" if "jax" not in sys.modules
+                else "spawn")
+
+
+def _sweep(wl, registry=None, **session_kw):
+    kw = _pool_kw()
+    kw.update(session_kw)
+    s = SearchSession(wl, hw=U250, cfg=_EVO, registry=registry,
+                      session=SessionConfig(**kw))
+    s.run()
+    return s
+
+
+def _result_key(report):
+    """Bit-identity key: winner genome + per-design (latency, evals)."""
+    return (report.best.evo.best.key(),
+            tuple((r.latency_cycles, r.evo.evals) for r in report.results))
+
+
+def bench_chaos():
+    root = tempfile.mkdtemp(prefix="chaos-bench-")
+    out = {}
+    try:
+        wl = matmul(32, 32, 32)
+
+        # -- 1. crash + hang + corrupt put: recover, bit-identically ----
+        t0 = time.perf_counter()
+        clean = _sweep(wl)
+        clean_wall = time.perf_counter() - t0
+        n_designs = len(clean.designs)
+        plan = chaos_plan(seed=10, n_designs=n_designs,
+                          crashes=1, hangs=1, corrupt_puts=1,
+                          hang_delay_s=60.0)
+        store = RegistryStore(os.path.join(root, "registry"))
+        fp = workload_fingerprint(wl, U250)
+        t0 = time.perf_counter()
+        with injected(plan):
+            chaotic = _sweep(wl, registry=store)
+            # the sweep recorded through the corrupt spec: the reader
+            # must quarantine, never serve garbage or crash
+            assert store.get(fp) is None, "corrupt record was served"
+        chaos_wall = time.perf_counter() - t0
+        path = store._path(fp.digest)
+        assert os.path.exists(path + ".corrupt"), "no quarantine file"
+        assert not any(r.failed for r in chaotic.report.results), \
+            "chaos sweep left failed placeholders"
+        assert chaotic.pool_rebuilds >= 1, "crash did not rebuild the pool"
+        assert chaotic.design_retries, "no design was retried"
+        assert _result_key(chaotic.report) == _result_key(clean.report), \
+            "recovered sweep diverged from the fault-free run"
+        # a clean re-record restores the cache after quarantine
+        _sweep(wl, registry=store)
+        assert store.get(fp) is not None, "store unusable after quarantine"
+        out["n_designs"] = n_designs
+        out["plan"] = plan.describe()
+        out["pool_rebuilds"] = chaotic.pool_rebuilds
+        out["design_retries"] = {str(k): v
+                                 for k, v in chaotic.design_retries.items()}
+        out["clean_wall_s"] = clean_wall
+        out["chaos_wall_s"] = chaos_wall
+        out["bit_identical"] = True
+        emit("chaos_recovery", chaos_wall * 1e6,
+             f"rebuilds={chaotic.pool_rebuilds} "
+             f"retries={sum(chaotic.design_retries.values())} identical")
+
+        # -- 2. disabled-injection overhead < 2% + bit-identity ---------
+        faults.deactivate()
+        n = 1_000_000
+        t0 = time.perf_counter()
+        for i in range(n):
+            faults.fault_point("search.worker", key=i)
+        per_check_s = (time.perf_counter() - t0) / n
+        # the sweep's own injection traffic: one check per design
+        # dispatch plus one per registry write
+        checks_per_sweep = n_designs + 2
+        overhead = per_check_s * checks_per_sweep / clean_wall
+        out["disabled_check_us"] = per_check_s * 1e6
+        out["disabled_overhead_frac"] = overhead
+        emit("chaos_disabled_overhead", per_check_s * 1e6,
+             f"{overhead:.2e} of {clean_wall:.2f}s sweep")
+        assert overhead < 0.02, f"disabled overhead {overhead:.3%} >= 2%"
+        with injected(FaultPlan(())):        # active but empty plan
+            empty = _sweep(wl)
+        assert _result_key(empty.report) == _result_key(clean.report), \
+            "an empty fault plan perturbed the search"
+        out["empty_plan_bit_identical"] = True
+        emit("chaos_empty_plan_identity", 0, "identical")
+
+        # -- 3. bursty serving: shed + timeout, everyone accounted ------
+        from repro.serve import ContinuousServingEngine, ServeConfig
+        from repro.serve.sim import bursty_requests, countdown_model
+        model = countdown_model(vocab_size=16)
+        params = model.init(None)
+        eng = ContinuousServingEngine(
+            model, params, ServeConfig(max_batch=1, max_seq=48,
+                                       eos_token=0, admit_watermark=2))
+        reqs = bursty_requests(24, base_rps=2000.0, burst_rps=20000.0,
+                               vocab_size=16, max_new_tokens=32, seed=4)
+        for i, r in enumerate(reqs):
+            if i % 5 == 0:                   # a few sub-us SLOs: must
+                r.deadline_s = 1e-6          # time out, not wedge a slot
+        t0 = time.perf_counter()
+        outs, stats = eng.serve(reqs)
+        serve_wall = time.perf_counter() - t0
+        assert len(stats.requests) == len(reqs), "request lost"
+        assert all(o is not None for o in outs), "output lost"
+        ids = sorted(m.request_id for m in stats.requests)
+        assert ids == sorted(r.request_id for r in reqs), \
+            "request accounted twice or never"
+        assert stats.timed_out >= 1, "no deadline timeout fired"
+        assert stats.shed >= 1, "watermark shed nothing under burst"
+        reasons = {}
+        for m in stats.requests:
+            reasons[m.finish_reason] = reasons.get(m.finish_reason, 0) + 1
+        assert reasons.get("shed", 0) == stats.shed
+        assert reasons.get("timeout", 0) == stats.timed_out
+        out["serve_wall_s"] = serve_wall
+        out["serve_reasons"] = reasons
+        out["serve_shed"] = stats.shed
+        out["serve_timed_out"] = stats.timed_out
+        emit("chaos_serving_overload", serve_wall * 1e6,
+             f"shed={stats.shed} timeout={stats.timed_out} "
+             f"of {len(reqs)} accounted")
+
+        save_json("chaos", out)
+    finally:
+        faults.deactivate()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    bench_chaos()

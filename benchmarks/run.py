@@ -41,6 +41,7 @@ def main() -> None:
         ("network_dse", "network_dse:bench_network_dse"),
         ("obs_trace", "trace_demo:bench_obs_trace"),
         ("calibration", "calibration:bench_calibration"),
+        ("chaos", "chaos:bench_chaos"),
         ("table2", "paper_mm:bench_table2"),
         ("fig1_fig15", "paper_mm:bench_fig1_fig15"),
         ("table3", "paper_mm:bench_table3"),

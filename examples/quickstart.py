@@ -107,6 +107,7 @@ def main() -> None:
     serving_demo()
     tracing_demo()
     calibration_demo(store)
+    chaos_demo()
 
 
 def network_demo(store: RegistryStore) -> None:
@@ -258,6 +259,61 @@ def calibration_demo(store: RegistryStore) -> None:
             else f"{pred:10.1f}us model"
         print(f"    {p.design:26s} {shown}")
     print(f"  correction factors persisted to {cal.state_file}")
+
+
+def chaos_demo() -> None:
+    """Chaos engineering (DESIGN.md §15): the sweep survives its workers.
+
+    A deterministic fault plan kills one pool worker mid-design
+    (``os._exit``, a simulated OOM-kill) and hangs another; the engine
+    rebuilds the pool, retries the lost designs, and — because every
+    per-design search is seeded — lands on the bit-identical winner of
+    a fault-free run.  A corrupt registry write is quarantined by the
+    next reader instead of being served."""
+    import tempfile
+
+    from repro.core import matmul
+    from repro.faults import FaultPlan, FaultSpec, injected
+    from repro.registry import workload_fingerprint
+
+    wl = matmul(32, 32, 32)
+
+    def sweep():
+        s = SearchSession(
+            wl, cfg=EvoConfig(epochs=6, population=16, seed=0),
+            session=SessionConfig(executor="process", max_workers=2,
+                                  early_abort=False, hang_timeout_s=3.0))
+        s.run()
+        return s
+
+    clean = sweep()
+    plan = FaultPlan((
+        FaultSpec("search.worker", "crash", key="3"),
+        FaultSpec("search.worker", "hang", key="1", delay_s=60.0),
+    ))
+    print("\nchaos:" + plan.describe().replace("FaultPlan", " FaultPlan"))
+    with injected(plan):
+        chaotic = sweep()
+    same = (chaotic.report.best.evo.best.key()
+            == clean.report.best.evo.best.key())
+    print(f"  recovered: {chaotic.pool_rebuilds} pool rebuild(s), "
+          f"retries {dict(chaotic.design_retries)}, "
+          f"best bit-identical to fault-free run: {same}")
+
+    root = tempfile.mkdtemp(prefix="chaos-demo-")
+    store = RegistryStore(root)
+    fp = workload_fingerprint(wl, U250)
+    with injected(FaultPlan((FaultSpec("registry.put.payload",
+                                       "corrupt"),))):
+        sweep_store = SearchSession(
+            wl, cfg=EvoConfig(epochs=6, population=16, seed=0),
+            registry=store,
+            session=SessionConfig(executor="serial", early_abort=False))
+        sweep_store.run()
+        served = store.get(fp)
+    print(f"  corrupt record served: {served!r} "
+          f"(quarantined as *.corrupt — a cache must never crash "
+          "its caller)")
 
 
 # The process-pool engine uses the spawn context (fork is unsafe once jax's

@@ -6,6 +6,7 @@ from typing import Dict, List, Type
 
 from ..core import Rule
 from .atomic_write import AtomicWriteRule
+from .bare_except import BareExceptRule
 from .fork_safety import ForkSafetyRule
 from .int64_overflow import Int64OverflowRule
 from .jit_hygiene import JitHygieneRule
@@ -19,6 +20,7 @@ ALL_RULES: List[Type[Rule]] = [
     ScopedConfigRule,
     RngDisciplineRule,
     AtomicWriteRule,
+    BareExceptRule,
 ]
 
 RULES_BY_NAME: Dict[str, Type[Rule]] = {r.name: r for r in ALL_RULES}
@@ -27,6 +29,7 @@ __all__ = [
     "ALL_RULES",
     "RULES_BY_NAME",
     "AtomicWriteRule",
+    "BareExceptRule",
     "ForkSafetyRule",
     "Int64OverflowRule",
     "JitHygieneRule",

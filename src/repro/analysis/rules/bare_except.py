@@ -1,0 +1,107 @@
+"""bare-except: a swallowed exception must be visible somewhere.
+
+The chaos work (DESIGN.md §15) is built on faults *surfacing*: a worker
+crash becomes a ``failed=True`` result, a poisoned background tune
+becomes a logged warning and a metrics counter.  A silent ``except
+Exception: pass`` defeats all of it — the fault happened, nothing
+recorded it, and the next engineer debugs a ghost.  (The registry
+service's background worker dropped tune failures exactly this way
+before §15 made it observable.)
+
+The rule flags broad handlers — bare ``except:``, ``except Exception``,
+``except BaseException`` (alone or in a tuple) — whose body neither
+
+  * re-raises (``raise`` anywhere in the handler body), nor
+  * uses the bound exception (``except Exception as e`` + any read of
+    ``e`` — building an error result from it counts as handling), nor
+  * reports through a recognizable channel (``log.warning/error/...``,
+    ``print``, ``warnings.warn``, ``traceback.print_exc``, or the obs
+    spine's ``instant``/``counter``/``observe``).
+
+Narrow handlers (``except OSError``, ``except KeyError``) are never
+flagged: catching a *specific* expected error silently is a policy
+decision the author already made explicit.  A justified silent broad
+catch stays possible via a ``repro: ignore[bare-except] -- why``
+comment on the ``except`` line.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator
+
+from ..core import Finding, Rule
+from ..project import ModuleInfo, Project
+
+_BROAD = ("Exception", "BaseException")
+
+# call-attribute tails that count as "the failure was reported": stdlib
+# logging methods, warnings/traceback, print, and the obs spine's
+# event/metric emitters
+_REPORTING_ATTRS = {
+    "warning", "warn", "error", "exception", "critical", "info", "debug",
+    "log", "print", "print_exc", "print_exception", "format_exc",
+    "instant", "counter", "observe",
+}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:                       # bare ``except:``
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD
+                   for e in t.elts)
+    return False
+
+
+def _call_tail(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _is_silent(handler: ast.ExceptHandler) -> bool:
+    for node in handler.body:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Raise):
+                return False
+            if handler.name and isinstance(sub, ast.Name) \
+                    and sub.id == handler.name \
+                    and isinstance(sub.ctx, ast.Load):
+                return False
+            if isinstance(sub, ast.Call) \
+                    and _call_tail(sub) in _REPORTING_ATTRS:
+                return False
+    return True
+
+
+class BareExceptRule(Rule):
+    name = "bare-except"
+    description = ("broad exception handlers (bare/Exception/BaseException)"
+                   " must re-raise, use the bound exception, or report it "
+                   "(log/print/obs) — never swallow silently")
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for mod in project.iter_modules():
+            yield from self._check_module(mod)
+
+    def _check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node) or not _is_silent(node):
+                continue
+            caught = "bare except" if node.type is None else \
+                "except " + ast.unparse(node.type)
+            yield self.finding(
+                mod, node.lineno, col=node.col_offset,
+                message=(
+                    f"{caught} swallows the error silently; re-raise, "
+                    "use the bound exception, or report it (log/print/"
+                    "obs counter) so a fault is never invisible"))

@@ -128,7 +128,7 @@ def _jax_platform() -> Optional[str]:
     try:
         import jax
         return jax.devices()[0].platform
-    except Exception:  # jax missing or no backend — ladder degrades
+    except Exception:  # repro: ignore[bare-except] -- jax missing or no backend: the measurement ladder degrades to the analytic rung by design
         return None
 
 
@@ -213,7 +213,7 @@ def _hlo_rung(wl: Workload, genome, hw: HardwareProfile,
             return (_roofline_us(costs.flops, costs.bytes, hw), compile_us,
                     "hlo blocks=%dx%dx%d flops=%g bytes=%g"
                     % (blocks + (costs.flops, costs.bytes)))
-        except Exception:  # no jax / lowering failed: analytic rung
+        except Exception:  # repro: ignore[bare-except] -- no jax / lowering failed: fall through to the analytic rung, the ladder's documented fallback
             pass
     flops, byts = _analytic_costs(wl, genome)
     return (_roofline_us(flops, byts, hw), 0.0,

@@ -42,10 +42,12 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import dataclasses
+import logging
 import math
 import multiprocessing
 import os
 import sys
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .design_space import Genome, Permutation, enumerate_designs
@@ -55,9 +57,14 @@ from .evolutionary import (EvoConfig, EvoResult, TraceEntry,
 from .hardware import HardwareProfile, U250
 from .perf_model import BatchPerformanceModel, PerformanceModel
 from .workloads import Workload
-from repro.obs import get_tracer
+from repro import faults
+from repro.obs import get_metrics, get_tracer
+from repro.runtime.restart import RestartPolicy, backoff_delay_s
+from repro.runtime.straggler import StragglerDetector
 
 Design = Tuple[Tuple[str, ...], Permutation]
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,26 @@ class SessionConfig:
     # the shared-incumbent abort can actually cut it; "index" keeps
     # enumeration order.  Results are always reported in design order.
     schedule: str = "wide_first"
+    # -- fault tolerance (DESIGN.md §15) --------------------------------
+    # A raised worker exception is isolated to its design (failed=True
+    # placeholder result).  A dead worker process (OOM-kill class) breaks
+    # the whole pool: the pool is rebuilt and the lost designs retried,
+    # up to max_design_retries attempts per design and max_pool_rebuilds
+    # rebuilds per sweep — past that the sweep degrades to the serial
+    # executor for whatever remains.  Retry time (backoff included) is
+    # charged against the sweep's time budget, not on top of it.
+    max_design_retries: int = 3
+    max_pool_rebuilds: int = 3
+    pool_backoff_s: float = 0.05      # doubles per rebuild (capped)
+    pool_backoff_max_s: float = 2.0
+    # Hang handling: a design still running past its deadline gets its
+    # pool killed and is retried like a crash.  hang_timeout_s is the
+    # explicit per-design deadline; None derives one from the budget
+    # slice (hang_factor x slice + 1s grace) and disables the deadline
+    # entirely for unbudgeted sweeps — a legit long search is not a hang.
+    hang_timeout_s: Optional[float] = None
+    hang_factor: float = 4.0
+    straggler_k: float = 4.0          # MAD threshold for flagging (§15)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,9 +135,11 @@ def pareto_frontier(results: Sequence) -> List:
     """Non-dominated ``DesignResult``s by (latency, dsp, bram), minimized.
 
     Aborted designs are excluded — they were cut *because* they are
-    dominated, so their metrics are not search optima.
+    dominated, so their metrics are not search optima.  Failed designs
+    (fault-isolated placeholders, §15) carry no metrics at all.
     """
-    pool = [r for r in results if not getattr(r, "aborted", False)]
+    pool = [r for r in results if not getattr(r, "aborted", False)
+            and not getattr(r, "failed", False)]
 
     def dominates(a, b):
         le = (a.latency_cycles <= b.latency_cycles and a.dsp <= b.dsp
@@ -137,7 +166,7 @@ _WORKER: Dict = {}
 
 def _pool_init(wl, hw, designs, use_mp_seed, divisors_only, incumbent,
                abort_factor, probe_epochs, triage, triage_factor,
-               trace_path=None):
+               trace_path=None, fault_plan=None, fault_state_dir=None):
     _WORKER.update(wl=wl, hw=hw, designs=designs, use_mp_seed=use_mp_seed,
                    divisors_only=divisors_only, incumbent=incumbent,
                    abort_factor=abort_factor, probe_epochs=probe_epochs,
@@ -149,6 +178,11 @@ def _pool_init(wl, hw, designs, use_mp_seed, divisors_only, incumbent,
         from repro import obs
         obs.configure(trace_path,
                       process_name="sweep-worker-%d" % os.getpid())
+    # fault plan travels by initargs (works under spawn, where the
+    # parent's module globals are not inherited); the shared state_dir
+    # gives once-only firing across retries and pool rebuilds.
+    if fault_plan is not None:
+        faults.activate(fault_plan, state_dir=fault_state_dir, worker=True)
 
 
 def _worker_built(i):
@@ -202,6 +236,7 @@ def result_payload(res) -> Dict:
 def _pool_tune(i: int, cfg: EvoConfig, early_abort: bool,
                seed_triples: Tuple) -> Dict:
     from .tuner import tune_design
+    faults.fault_point("search.worker", key=i)
     desc, model, batch_model = _worker_built(i)
     df, perm = _WORKER["designs"][i]
     seeds = tuple(Genome(dict(t)) for t in seed_triples)
@@ -283,6 +318,10 @@ class SearchSession:
         # and the disabled cost is a single ``is not None`` check.
         self.calibration = calibration
         self.calibration_report = None
+        # fault-recovery bookkeeping for the last run() (DESIGN.md §15)
+        self.pool_rebuilds = 0
+        self.design_retries: Dict[int, int] = {}
+        self.straggler_designs: set = set()
         self.report = None
         self._incumbent: Optional[float] = None
         self._seeds: Dict = {}
@@ -384,6 +423,7 @@ class SearchSession:
     # -- execution ---------------------------------------------------------
     def _tune_index(self, i: int, cfg: EvoConfig):
         from .tuner import tune_design
+        faults.fault_point("search.worker", key=i)
         df, perm = self.designs[i]
         desc, model, batch_model = self.built(self.designs[i])
         incumbent_fn = (lambda: self._incumbent) \
@@ -400,11 +440,54 @@ class SearchSession:
                            triage_factor=self.session.triage_factor,
                            extra_seeds=self._design_seeds(self.designs[i]))
 
+    # -- fault isolation (DESIGN.md §15) -----------------------------------
+    def _failed_result(self, i: int, error: str):
+        """Placeholder ``DesignResult`` for a design whose search died.
+
+        Carries no metrics (latency inf, infeasible) so nothing
+        downstream can mistake it for a search optimum: ``pareto_frontier``
+        and ``top_k`` skip it, and a sweep containing one is never
+        recorded in the registry.
+        """
+        from .design_space import DesignPoint
+        from .tuner import DesignResult
+        df, perm = self.designs[i]
+        desc, model, _ = self.built(self.designs[i])
+        g = Genome({l.name: (l.bound, 1, 1) for l in self.wl.loops})
+        evo = EvoResult(best=g, best_fitness=-math.inf, evals=0,
+                        seconds=0.0, trace=[])
+        return DesignResult(
+            design=DesignPoint(df, perm, g), descriptor=desc, model=model,
+            evo=evo, latency_cycles=math.inf, throughput=0.0,
+            dsp=0, bram=0, feasible=False, seconds=0.0,
+            failed=True, error=error)
+
+    def _isolate(self, i: int, exc: BaseException):
+        """Worker exception → failed placeholder (never kills the sweep)."""
+        get_tracer().instant("fault.worker_error", cat="fault", design=i,
+                             error=repr(exc))
+        get_metrics().counter("search.worker_errors")
+        _log.warning("design %d failed in search, isolating: %r", i, exc)
+        return self._failed_result(i, repr(exc))
+
+    def _flag_stragglers(self, detector: StragglerDetector) -> None:
+        for i in detector.stragglers():
+            if i not in self.straggler_designs:
+                self.straggler_designs.add(i)
+                get_tracer().instant("fault.straggler", cat="fault",
+                                     design=i,
+                                     median_s=detector.host_median(i))
+                get_metrics().counter("search.stragglers")
+
     def _run_serial(self) -> List:
         out = []
         for i in range(len(self.designs)):
             cfg, slice_s = self._dispatch_cfg(design=i)
-            res = self._tune_index(i, cfg)
+            try:
+                res = self._tune_index(i, cfg)
+            except Exception as exc:
+                out.append(self._isolate(i, exc))
+                continue
             self._refund(slice_s, res.seconds, design=i)
             self._observe(res)
             out.append(res)
@@ -459,6 +542,169 @@ class SearchSession:
             feasible=p["feasible"], seconds=p["seconds"],
             aborted=p["aborted"])
 
+    def _deadline_for(self, slice_s: Optional[float]) -> Optional[float]:
+        """Absolute (monotonic) hang deadline for a just-submitted design."""
+        if self.session.hang_timeout_s is not None:
+            return time.monotonic() + self.session.hang_timeout_s
+        if slice_s is not None:
+            # derived from the budget slice: a design honoring its
+            # time_budget_s finishes well inside hang_factor x slice;
+            # +1s grace absorbs fixed per-task overhead (pool dispatch,
+            # model construction) so tiny slices don't false-positive
+            return time.monotonic() + \
+                self.session.hang_factor * slice_s + 1.0
+        return None
+
+    @staticmethod
+    def _kill_workers(ex) -> None:
+        """Forcibly kill a process pool's workers (hung tasks cannot be
+        cancelled — the executor would otherwise block shutdown forever)."""
+        procs = getattr(ex, "_processes", None) or {}
+        for p in list(procs.values()):
+            try:
+                p.kill()
+            except Exception:  # repro: ignore[bare-except] -- best-effort kill of an already-dying pool; a racing exit is the success case
+                pass
+
+    def _pool_generation(self, Executor, todo, results, detector,
+                         use_procs, workers) -> List[Tuple[int, str]]:
+        """One executor lifetime over ``todo`` (design indices).
+
+        Fills ``results`` for designs that completed (or raised — those
+        are isolated as failed placeholders).  Returns the designs lost
+        to a pool break or hang as ``(index, reason)`` pairs; empty list
+        means the generation finished cleanly.
+        """
+        lost: List[Tuple[int, str]] = []
+        pending: Dict = {}
+        broken = False
+        ex = Executor(max_workers=min(workers, len(todo)))
+
+        def submit(i):
+            nonlocal broken
+            cfg, slice_s = self._dispatch_cfg(design=i)
+            try:
+                if use_procs:
+                    seed_triples = tuple(
+                        tuple(g.as_dict().items())
+                        for g in self._design_seeds(self.designs[i]))
+                    fut = ex.submit(_pool_tune, i, cfg,
+                                    self.session.early_abort, seed_triples)
+                else:
+                    fut = ex.submit(self._tune_index, i, cfg)
+            except cf.BrokenExecutor:
+                # the pool died before this design even launched; its
+                # budget slice stays charged (retry cost comes out of
+                # the sweep budget, §15)
+                broken = True
+                lost.append((i, "worker_crash"))
+                return
+            deadline = self._deadline_for(slice_s) if use_procs else None
+            pending[fut] = (i, slice_s, deadline)
+
+        try:
+            # submission is lazy so budget refunds (and, for the thread
+            # pool, the in-process incumbent) flow to later designs;
+            # process workers additionally poll the shared incumbent
+            # value every epoch, so early submissions abort mid-flight
+            queue = list(todo)
+            next_i = 0
+            while not broken and next_i < min(workers, len(queue)):
+                submit(queue[next_i])
+                next_i += 1
+            while pending and not broken:
+                deadlines = [dl for (_, _, dl) in pending.values()
+                             if dl is not None]
+                timeout = max(0.0, min(deadlines) - time.monotonic()) \
+                    if deadlines else None
+                done, _ = cf.wait(list(pending), timeout=timeout,
+                                  return_when=cf.FIRST_COMPLETED)
+                for fut in done:
+                    i, slice_s, _dl = pending.pop(fut)
+                    try:
+                        res = fut.result()
+                    except cf.BrokenExecutor:
+                        # a worker process died (crash fault, OOM-kill
+                        # class): every in-flight future is poisoned —
+                        # drain them below and let the caller rebuild
+                        broken = True
+                        lost.append((i, "worker_crash"))
+                        get_tracer().instant("fault.pool_broken",
+                                             cat="fault", design=i)
+                        get_metrics().counter("search.worker_crashes")
+                        continue
+                    except Exception as exc:
+                        results[i] = self._isolate(i, exc)
+                        continue
+                    if use_procs:
+                        res = self._result_from_payload(i, res)
+                    self._refund(slice_s, res.seconds, design=i)
+                    self._observe(res)
+                    results[i] = res
+                    detector.record(i, res.seconds)
+                    self._flag_stragglers(detector)
+                if broken:
+                    break
+                # hang check: every wakeup, not just timeouts — a hung
+                # design's deadline can lapse while siblings complete
+                now = time.monotonic()
+                expired = [fut for fut, (_, _, dl) in pending.items()
+                           if dl is not None and now >= dl]
+                if expired:
+                    for fut in expired:
+                        i, _, _ = pending.pop(fut)
+                        lost.append((i, "hang"))
+                        get_tracer().instant("fault.hang_killed",
+                                             cat="fault", design=i)
+                        get_metrics().counter("search.worker_hangs")
+                        _log.warning(
+                            "design %d exceeded its hang deadline; "
+                            "killing the pool and retrying", i)
+                    # a hung worker cannot be cancelled: kill the pool,
+                    # in-flight siblings are collateral (retried too)
+                    self._kill_workers(ex)
+                    broken = True
+                    break
+                while len(pending) < workers and next_i < len(queue):
+                    submit(queue[next_i])
+                    next_i += 1
+            if broken:
+                lost.extend((i, "pool_collateral")
+                            for (i, _, _) in pending.values())
+                pending.clear()
+                lost.extend((queue[j], "pool_collateral")
+                            for j in range(next_i, len(queue)))
+        finally:
+            if broken and use_procs:
+                self._kill_workers(ex)
+            try:
+                ex.shutdown(wait=True, cancel_futures=True)
+            except Exception:  # repro: ignore[bare-except] -- shutdown of a broken pool can re-raise its own break; the pool is discarded either way
+                pass
+        return lost
+
+    def _run_degraded(self, todo, results) -> None:
+        """Last-resort graceful degrade: the pool kept dying, finish the
+        remaining designs on the serial executor in this process."""
+        _log.warning(
+            "process pool broke %d times (max %d); degrading %d remaining "
+            "designs to the serial executor", self.pool_rebuilds,
+            self.session.max_pool_rebuilds, len(todo))
+        get_tracer().instant("fault.degrade_serial", cat="fault",
+                             rebuilds=self.pool_rebuilds,
+                             remaining=len(todo))
+        get_metrics().counter("search.degrade_serial")
+        for i in todo:
+            cfg, slice_s = self._dispatch_cfg(design=i)
+            try:
+                res = self._tune_index(i, cfg)
+            except Exception as exc:
+                results[i] = self._isolate(i, exc)
+                continue
+            self._refund(slice_s, res.seconds, design=i)
+            self._observe(res)
+            results[i] = res
+
     def _run_pool(self) -> List:
         n_designs = len(self.designs)
         workers = self.session.max_workers or \
@@ -469,6 +715,8 @@ class SearchSession:
             ctx = self._mp_context()
             shared = ctx.Value("d", math.inf) \
                 if self.session.early_abort else None
+            plan = faults.active_plan()
+            plan_dir = faults.state_dir() if plan is not None else None
 
             def Executor(max_workers):
                 return cf.ProcessPoolExecutor(
@@ -480,52 +728,53 @@ class SearchSession:
                               self.session.probe_epochs,
                               self.session.triage,
                               self.session.triage_factor,
-                              get_tracer().path))
+                              get_tracer().path, plan, plan_dir))
         else:
             Executor = cf.ThreadPoolExecutor
 
-        with Executor(max_workers=workers) as ex:
-            # submission is still lazy so budget refunds (and, for the
-            # thread pool, the in-process incumbent) flow to later designs;
-            # process workers additionally poll the shared incumbent value
-            # every epoch, so even designs submitted early abort mid-flight
-            pending: Dict = {}
+        if self.session.schedule == "wide_first":
+            order = sorted(range(n_designs),
+                           key=lambda i: -len(self.designs[i][0]))
+        else:
+            order = list(range(n_designs))
 
-            def submit(i):
-                cfg, slice_s = self._dispatch_cfg(design=i)
-                if use_procs:
-                    seed_triples = tuple(
-                        tuple(g.as_dict().items())
-                        for g in self._design_seeds(self.designs[i]))
-                    fut = ex.submit(_pool_tune, i, cfg,
-                                    self.session.early_abort, seed_triples)
-                else:
-                    fut = ex.submit(self._tune_index, i, cfg)
-                pending[fut] = (i, slice_s)
-
-            if self.session.schedule == "wide_first":
-                order = sorted(range(n_designs),
-                               key=lambda i: -len(self.designs[i][0]))
-            else:
-                order = list(range(n_designs))
-            next_i = 0
-            while next_i < min(workers, n_designs):
-                submit(order[next_i])
-                next_i += 1
-            while pending:
-                done, _ = cf.wait(list(pending),
-                                  return_when=cf.FIRST_COMPLETED)
-                for fut in done:
-                    i, slice_s = pending.pop(fut)
-                    res = fut.result()
-                    if use_procs:
-                        res = self._result_from_payload(i, res)
-                    self._refund(slice_s, res.seconds, design=i)
-                    self._observe(res)
-                    results[i] = res
-                    if next_i < n_designs:
-                        submit(order[next_i])
-                        next_i += 1
+        detector = StragglerDetector(window=4, k=self.session.straggler_k,
+                                     min_samples=1)
+        retries = [0] * n_designs
+        policy = RestartPolicy(max_failures=self.session.max_pool_rebuilds,
+                               backoff_s=self.session.pool_backoff_s,
+                               max_backoff_s=self.session.pool_backoff_max_s)
+        while True:
+            todo = [i for i in order if results[i] is None]
+            if not todo:
+                break
+            if self.pool_rebuilds > self.session.max_pool_rebuilds:
+                self._run_degraded(todo, results)
+                break
+            lost = self._pool_generation(Executor, todo, results, detector,
+                                         use_procs, workers)
+            if not lost:
+                continue
+            self.pool_rebuilds += 1
+            get_tracer().instant("fault.pool_rebuilt", cat="fault",
+                                 rebuilds=self.pool_rebuilds,
+                                 lost=len(lost))
+            get_metrics().counter("search.pool_rebuilds")
+            for i, reason in lost:
+                if reason == "pool_collateral":
+                    continue    # innocent bystander: free retry
+                retries[i] += 1
+                self.design_retries[i] = retries[i]
+                if retries[i] > self.session.max_design_retries:
+                    results[i] = self._failed_result(
+                        i, "lost to %s (%d attempts)" % (reason, retries[i]))
+            delay = backoff_delay_s(policy, self.pool_rebuilds)
+            if delay:
+                time.sleep(delay)
+                if self._budget_left is not None:
+                    # restart backoff is part of the sweep's wall clock:
+                    # charge it so the budget still bounds elapsed time
+                    self._budget_left -= delay
         return results
 
     def run(self):
@@ -538,10 +787,14 @@ class SearchSession:
         """
         from .tuner import TuneReport
         tr = get_tracer()
-        # fresh budget ledger per run (a session may be re-run)
+        # fresh budget ledger + fault bookkeeping per run (a session may
+        # be re-run)
         self._budget_left = self.time_budget_s
         self._unassigned = len(self.designs)
         self.budget_log = []
+        self.pool_rebuilds = 0
+        self.design_retries = {}
+        self.straggler_designs = set()
         with tr.span("sweep", cat="search", workload=self.wl.name,
                      designs=len(self.designs),
                      executor=self.session.executor,
@@ -573,7 +826,15 @@ class SearchSession:
             self.report = TuneReport(workload=self.wl.name, results=results,
                                      engine=resolved_engine_name(self.cfg))
             if self.registry is not None:
-                self._record()
+                if any(r.failed for r in results):
+                    # a sweep with fault-isolated placeholders is not a
+                    # complete search: recording it would poison the
+                    # exact-hit cache with partial winners
+                    tr.instant("registry.record_skipped", cat="registry",
+                               workload=self.wl.name,
+                               failed=sum(r.failed for r in results))
+                else:
+                    self._record()
             if self.calibration is not None:
                 # after the sweep is recorded: measurement can never
                 # perturb the search (gated in benchmarks/calibration.py)
@@ -595,7 +856,9 @@ class SearchSession:
         pool = [r for r in self.report.results
                 if r.feasible and not r.aborted]
         if not pool:
-            pool = [r for r in self.report.results if not r.aborted] \
+            pool = [r for r in self.report.results
+                    if not r.aborted and not r.failed] \
+                or [r for r in self.report.results if not r.failed] \
                 or list(self.report.results)
         return sorted(pool, key=lambda r: r.latency_cycles)[:k]
 

@@ -42,6 +42,11 @@ class DesignResult:
     feasible: bool
     seconds: float
     aborted: bool = False          # search cut off as dominated (engine)
+    # fault isolation (engine, DESIGN.md §15): the design's search died
+    # (worker exception, or lost to pool crashes/hangs beyond the retry
+    # budget) and this is a placeholder, not a search optimum
+    failed: bool = False
+    error: str = ""
 
     def summary(self) -> Dict:
         return {
@@ -54,6 +59,8 @@ class DesignResult:
             "evals": self.evo.evals,
             "seconds": round(self.seconds, 3),
             "aborted": self.aborted,
+            "failed": self.failed,
+            "error": self.error,
             "tiling": self.evo.best.as_dict(),
         }
 

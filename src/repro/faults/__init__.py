@@ -1,0 +1,44 @@
+"""repro.faults — deterministic, seeded fault injection (DESIGN.md §15).
+
+The chaos layer for the DSE stack: a :class:`FaultPlan` describes
+worker crashes, hangs, stragglers, transient I/O errors and corrupt
+registry writes at named sites; :func:`fault_point` /
+:func:`corrupt_bytes` are the hooks the search engine, registry store
+and serving engine call at those sites.  Disabled (no plan active) the
+hooks cost one ``is None`` check — gated <2% with bit-identical results
+in ``benchmarks/chaos.py``.
+
+Typical use::
+
+    from repro import faults
+    plan = faults.chaos_plan(seed=0, n_designs=18, crashes=1, hangs=1)
+    with faults.injected(plan):
+        report = SearchSession(wl).run()    # survives, same best design
+
+This package must stay jax-free: ``core.engine`` imports it and the
+fork-safety rule (DESIGN.md §13) holds that closure importable without
+jax.
+"""
+
+from .inject import (InjectedFault, TransientIOError, activate,
+                     active_plan, corrupt_bytes, deactivate, fault_point,
+                     injected, state_dir, CRASH_EXIT_CODE)
+from .plan import KINDS, SITES, FaultPlan, FaultSpec, chaos_plan
+
+__all__ = [
+    "CRASH_EXIT_CODE",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "KINDS",
+    "SITES",
+    "TransientIOError",
+    "activate",
+    "active_plan",
+    "chaos_plan",
+    "corrupt_bytes",
+    "deactivate",
+    "fault_point",
+    "injected",
+    "state_dir",
+]

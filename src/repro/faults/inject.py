@@ -1,0 +1,180 @@
+"""Fault activation + the ``fault_point`` hook instrumented code calls.
+
+Disabled (no plan installed — the default, and production) a fault
+point costs one module-global read and one ``is None`` test; the
+<2% overhead gate in ``benchmarks/chaos.py`` holds the line.
+
+Activation is **process-safe**: :func:`activate` installs the plan in
+this process and allocates a *state directory*; every firing claims a
+token file in it with ``O_CREAT | O_EXCL`` (atomic on every platform we
+run on), so a spec's ``times`` budget is enforced across all processes
+sharing the directory.  ``SearchSession`` ships ``(plan, state_dir)``
+to its pool workers through the pool initializer, which is how a plan
+survives both spawn (re-imported interpreter) and fork (inherited
+globals are re-activated idempotently) workers.
+
+Workers activate with ``worker=True``: only then does a ``crash`` fault
+actually ``os._exit`` the process (simulated OOM-kill).  In a
+non-worker process — the serial executor, the pool *parent*, a test —
+``crash`` degrades to a raised :class:`InjectedFault`, so a plan can
+never take down the orchestrator it is testing.
+
+Every firing is emitted on the obs spine: a ``fault.injected`` instant
+(cat ``fault`` — visible in Perfetto and ``obs summarize``) plus
+``fault.injected`` / ``fault.<kind>`` metrics counters.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+import time
+from typing import Iterator, Optional, Union
+
+from repro.obs import get_metrics, get_tracer
+
+from .plan import FaultPlan, FaultSpec
+
+CRASH_EXIT_CODE = 87          # distinctive; visible in pool post-mortems
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (``raise``/parent-side ``crash``)."""
+
+
+class TransientIOError(OSError):
+    """An injected transient I/O failure; retry loops must absorb it."""
+
+
+_PLAN: Optional[FaultPlan] = None
+_STATE_DIR: Optional[str] = None
+_IN_WORKER = False
+
+
+def activate(plan: FaultPlan, state_dir: Optional[str] = None,
+             worker: bool = False) -> str:
+    """Install ``plan`` in this process; returns the token state dir.
+
+    ``state_dir=None`` allocates a fresh private directory (the plan
+    owner); workers must be handed the owner's directory so firing
+    budgets are shared.  Re-activation replaces the previous plan.
+    """
+    global _PLAN, _STATE_DIR, _IN_WORKER
+    if state_dir is None:
+        state_dir = tempfile.mkdtemp(prefix="repro-faults-")
+    _PLAN, _STATE_DIR, _IN_WORKER = plan, state_dir, worker
+    get_tracer().instant("fault.plan_activated", cat="fault",
+                         specs=len(plan.specs), seed=plan.seed,
+                         worker=worker)
+    return state_dir
+
+
+def deactivate() -> None:
+    """Remove the active plan (token files are left for the owner)."""
+    global _PLAN, _STATE_DIR, _IN_WORKER
+    _PLAN, _STATE_DIR, _IN_WORKER = None, None, False
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _PLAN
+
+
+def state_dir() -> Optional[str]:
+    return _STATE_DIR
+
+
+@contextlib.contextmanager
+def injected(plan: FaultPlan,
+             state_dir: Optional[str] = None) -> Iterator[str]:
+    """``with injected(plan):`` — activate for the block, then remove."""
+    sd = activate(plan, state_dir=state_dir)
+    try:
+        yield sd
+    finally:
+        deactivate()
+
+
+# ------------------------------------------------------------------ #
+# Firing
+# ------------------------------------------------------------------ #
+def _claim(spec_index: int, times: int) -> bool:
+    """Claim one of ``times`` firing tokens; False once exhausted.
+
+    O_CREAT|O_EXCL makes each token claimable exactly once across every
+    process sharing the state dir — the mechanism that keeps a retried
+    design from re-hitting the fault that killed its first attempt.
+    """
+    assert _STATE_DIR is not None
+    for n in range(times):
+        token = os.path.join(_STATE_DIR, f"{spec_index:03d}.{n}")
+        try:
+            fd = os.open(token, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            continue
+        except OSError:
+            return False          # state dir gone: fail closed, no fault
+        os.close(fd)
+        return True
+    return False
+
+
+def _emit(spec: FaultSpec, site: str, key: Optional[str]) -> None:
+    get_tracer().instant("fault.injected", cat="fault", site=site,
+                         kind=spec.kind, key="" if key is None else key,
+                         delay_s=spec.delay_s)
+    m = get_metrics()
+    m.counter("fault.injected")
+    m.counter(f"fault.{spec.kind}")
+
+
+def _execute(spec: FaultSpec, site: str, key: Optional[str]) -> None:
+    _emit(spec, site, key)
+    if spec.kind in ("slow", "hang"):
+        delay = spec.delay_s or (3600.0 if spec.kind == "hang" else 0.0)
+        time.sleep(delay)
+    elif spec.kind == "raise":
+        raise InjectedFault(f"injected fault at {site}"
+                            + (f" (key={key})" if key is not None else ""))
+    elif spec.kind == "io_error":
+        raise TransientIOError(f"injected transient I/O error at {site}")
+    elif spec.kind == "crash":
+        if _IN_WORKER:
+            os._exit(CRASH_EXIT_CODE)     # simulated OOM-kill
+        raise InjectedFault(
+            f"injected crash at {site} (non-worker process: raised)")
+    # "corrupt" only acts through corrupt_bytes(); firing it here is a
+    # plan mistake — emit (observable) but change nothing
+
+
+def fault_point(site: str, key=None) -> None:
+    """Injection hook.  No-op without an active plan (one None check)."""
+    if _PLAN is None:
+        return
+    k = None if key is None else str(key)
+    for idx, spec in enumerate(_PLAN.specs):
+        if spec.kind == "corrupt" or not spec.matches(site, k):
+            continue
+        if _claim(idx, spec.times):
+            _execute(spec, site, k)
+
+
+def corrupt_bytes(site: str, data: Union[str, bytes],
+                  key=None) -> Union[str, bytes]:
+    """Pass-through that garbles ``data`` when a ``corrupt`` spec fires.
+
+    The corruption is deterministic — truncate to half and append an
+    un-parseable marker — modelling a torn or poisoned payload the
+    *reader* must survive (quarantine, never crash)."""
+    if _PLAN is None:
+        return data
+    k = None if key is None else str(key)
+    for idx, spec in enumerate(_PLAN.specs):
+        if spec.kind != "corrupt" or not spec.matches(site, k):
+            continue
+        if _claim(idx, spec.times):
+            _emit(spec, site, k)
+            marker: Union[str, bytes] = "\x00<<injected-corruption>>" \
+                if isinstance(data, str) else b"\x00<<injected-corruption>>"
+            data = data[: len(data) // 2] + marker
+    return data

@@ -1,0 +1,135 @@
+"""Deterministic fault plans: what breaks, where, and how many times.
+
+A :class:`FaultPlan` is a picklable list of :class:`FaultSpec`s.  Each
+spec names an **injection site** (a string the instrumented code passes
+to :func:`repro.faults.fault_point`), a fault **kind**, an optional
+**key** restricting the spec to one logical unit of work (e.g. one
+design index), and a firing budget (``times``).  Determinism comes from
+two properties:
+
+  * plans are *data*, generated up front (optionally from a seed via
+    :func:`chaos_plan`) — nothing is sampled at fire time;
+  * each spec fires at most ``times`` times **across every process
+    sharing the plan's state directory** (claimed via ``O_CREAT|O_EXCL``
+    token files, see ``inject.py``), so a retried unit of work does not
+    re-hit the fault that killed its first attempt.
+
+The plan ships to spawn/fork pool workers through the pool initializer
+(plain dataclasses of primitives — nothing heavy pickles), which is what
+makes injection survive ``SearchSession``'s persistent process pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional, Tuple
+
+# fault kinds ---------------------------------------------------------- #
+#   raise     raise InjectedFault (a worker exception; survivable)
+#   crash     os._exit() in a pool worker (simulated OOM-kill -> the
+#             parent sees BrokenProcessPool); raises in a non-worker
+#             process so a serial run is never killed by its own plan
+#   hang      sleep delay_s (default: effectively forever) -- exercises
+#             hang deadlines / worker-kill recovery
+#   slow      sleep delay_s, then continue normally (straggler)
+#   io_error  raise TransientIOError (an OSError; retry-with-backoff
+#             paths must absorb it)
+#   corrupt   garble the bytes passed through corrupt_bytes() at the
+#             site (torn/poisoned payload; readers must quarantine)
+KINDS = ("raise", "crash", "hang", "slow", "io_error", "corrupt")
+
+# Named injection sites wired into the stack (documentation; plans may
+# also name ad-hoc sites, e.g. in tests).
+SITES = {
+    "search.worker": "design-sweep worker, per design (key = design index)",
+    "registry.get": "record read, inside the store's I/O retry loop",
+    "registry.put": "record write, inside the store's I/O retry loop",
+    "registry.put.replace": "between the temp-file write and the atomic "
+                            "rename (kill-during-put window)",
+    "registry.put.payload": "record payload bytes (corrupt target)",
+    "serve.tick": "continuous-engine decode tick, inside its retry loop",
+    "service.tune": "TuningService background tune, per workload",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault: fire ``kind`` at ``site`` (matching
+    ``key`` when set) at most ``times`` times plan-wide."""
+
+    site: str
+    kind: str
+    key: Optional[str] = None      # fault_point(key=...) match; None = any
+    times: int = 1                 # firing budget (claimed cross-process)
+    delay_s: float = 0.0           # hang/slow sleep (hang default: forever)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+        if self.times < 1:
+            raise ValueError(f"times must be >= 1, got {self.times}")
+
+    def matches(self, site: str, key: Optional[str]) -> bool:
+        return self.site == site and (self.key is None or self.key == key)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, picklable set of faults (plus seed provenance)."""
+
+    specs: Tuple[FaultSpec, ...]
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+
+    def for_site(self, site: str) -> Tuple[FaultSpec, ...]:
+        return tuple(s for s in self.specs if s.site == site)
+
+    def describe(self) -> str:
+        head = f"FaultPlan(seed={self.seed}, {len(self.specs)} specs)"
+        body = "".join(
+            f"\n  [{i}] {s.kind}@{s.site}"
+            + (f" key={s.key}" if s.key is not None else "")
+            + (f" x{s.times}" if s.times != 1 else "")
+            + (f" delay={s.delay_s}s" if s.delay_s else "")
+            for i, s in enumerate(self.specs))
+        return head + body
+
+
+def chaos_plan(seed: int, n_designs: int,
+               crashes: int = 1, hangs: int = 1, slows: int = 0,
+               raises: int = 0, corrupt_puts: int = 1,
+               io_errors: int = 0,
+               hang_delay_s: float = 3600.0,
+               slow_delay_s: float = 0.5) -> FaultPlan:
+    """A seeded survivable plan against an ``n_designs`` sweep.
+
+    Crash/hang/slow/raise targets are distinct designs drawn
+    deterministically from ``seed``; registry faults are keyless (they
+    hit the sweep's own record traffic).  The same (seed, n_designs,
+    counts) always yields the same plan.
+    """
+    rng = random.Random(seed)
+    wanted = crashes + hangs + slows + raises
+    if wanted > n_designs:
+        raise ValueError(f"{wanted} design faults > {n_designs} designs")
+    targets = rng.sample(range(n_designs), wanted)
+    it = iter(targets)
+    specs = []
+    specs += [FaultSpec("search.worker", "crash", key=str(next(it)))
+              for _ in range(crashes)]
+    specs += [FaultSpec("search.worker", "hang", key=str(next(it)),
+                        delay_s=hang_delay_s) for _ in range(hangs)]
+    specs += [FaultSpec("search.worker", "slow", key=str(next(it)),
+                        delay_s=slow_delay_s) for _ in range(slows)]
+    specs += [FaultSpec("search.worker", "raise", key=str(next(it)))
+              for _ in range(raises)]
+    if corrupt_puts:
+        specs.append(FaultSpec("registry.put.payload", "corrupt",
+                               times=corrupt_puts))
+    if io_errors:
+        specs.append(FaultSpec("registry.get", "io_error", times=io_errors))
+    return FaultPlan(tuple(specs), seed=seed)

@@ -148,7 +148,7 @@ def matmul(a: jax.Array, b: jax.Array,
     try:
         params = dict(compiler_params=pltpu.CompilerParams(
             dimension_semantics=dims))
-    except Exception:  # older/newer pallas param spellings
+    except Exception:  # repro: ignore[bare-except] -- older/newer pallas param spellings; empty params is the portable fallback
         params = {}
 
     return pl.pallas_call(

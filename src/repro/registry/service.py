@@ -15,6 +15,7 @@ pools unsafe, and background tuning is throughput, not latency, work.
 from __future__ import annotations
 
 import collections
+import logging
 import queue
 import threading
 from typing import Dict, Optional
@@ -25,7 +26,10 @@ from repro.core.workloads import Workload
 from .fingerprint import workload_fingerprint
 from .store import Record, RegistryStore
 from .transfer import report_from_record
+from repro import faults
 from repro.obs import get_metrics, get_tracer
+
+_log = logging.getLogger(__name__)
 
 
 class TuningService:
@@ -116,6 +120,7 @@ class TuningService:
 
     def _tune(self, wl: Workload, cfg, session_kwargs):
         from repro.core.engine import SearchSession, SessionConfig
+        faults.fault_point("service.tune")
         session_kwargs = dict(session_kwargs)
         session_kwargs.setdefault("session", SessionConfig(executor="serial"))
         with get_tracer().span("service.tune", cat="registry",
@@ -167,8 +172,16 @@ class TuningService:
             digest, wl, cfg, session_kwargs = item
             try:
                 self._tune(wl, cfg, session_kwargs)
-            except Exception:           # noqa: BLE001 — cache, not service
+            except Exception as exc:    # cache, not service: degrade, but
+                # never silently — a poisoned workload must be visible in
+                # logs and metrics, not just a mute counter (§15)
                 self.stats["tune_errors"] += 1
+                get_metrics().counter("registry.tune_failed")
+                get_tracer().instant("registry.tune_failed", cat="registry",
+                                     workload=wl.name, error=repr(exc))
+                _log.warning("background tune of %r failed "
+                             "(callers keep their fallback): %r",
+                             wl.name, exc)
             finally:
                 with self._lock:
                     self._pending.discard(digest)

@@ -28,6 +28,7 @@ import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from .fingerprint import Fingerprint
+from repro import faults
 from repro.obs import get_metrics, get_tracer
 
 SCHEMA_VERSION = 4
@@ -123,9 +124,33 @@ class Record:
 class RegistryStore:
     """Filesystem-backed registry of :class:`Record`s keyed by fingerprint."""
 
-    def __init__(self, root: Optional[str] = None):
+    def __init__(self, root: Optional[str] = None,
+                 io_retries: int = 3, io_backoff_s: float = 0.01):
         self.root = root or default_root()
         self._records_dir = os.path.join(self.root, "records")
+        # transient-I/O policy (DESIGN.md §15): reads/writes retry
+        # OSErrors (NFS hiccups, EMFILE pressure) with capped backoff;
+        # FileNotFoundError is a normal miss and never retried
+        self.io_retries = io_retries
+        self.io_backoff_s = io_backoff_s
+
+    def _retry_io(self, fn, op: str):
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except FileNotFoundError:
+                raise
+            except OSError as exc:
+                attempt += 1
+                if attempt > self.io_retries:
+                    raise
+                delay = min(self.io_backoff_s * (2 ** (attempt - 1)), 1.0)
+                get_metrics().counter("registry.io_retry")
+                get_tracer().instant("fault.io_retry", cat="fault", op=op,
+                                     attempt=attempt, error=repr(exc))
+                if delay:
+                    time.sleep(delay)
 
     # -- paths ----------------------------------------------------------
     def _path(self, digest: str) -> str:
@@ -144,10 +169,15 @@ class RegistryStore:
                               else "registry.get_miss")
         return rec
 
+    def _read_payload(self, path: str) -> Dict:
+        faults.fault_point("registry.get")
+        with open(path) as f:
+            return json.load(f)
+
     def _load(self, path: str) -> Optional[Record]:
         try:
-            with open(path) as f:
-                payload = json.load(f)
+            payload = self._retry_io(lambda: self._read_payload(path),
+                                     op="get")
             version = payload.get("schema_version")
             if not isinstance(version, int):
                 raise ValueError("missing schema_version")
@@ -292,18 +322,31 @@ class RegistryStore:
     def _write(self, rec: Record) -> None:
         path = self._path(rec.fingerprint)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
-                                   suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(rec.to_json(), f, indent=2, sort_keys=True)
-            os.replace(tmp, path)
-        except BaseException:
+        data = json.dumps(rec.to_json(), indent=2, sort_keys=True)
+        # chaos hook: a "corrupt" spec at registry.put.payload truncates
+        # what lands on disk — readers must quarantine, never crash (§15)
+        data = faults.corrupt_bytes("registry.put.payload", data)
+
+        def attempt():
+            faults.fault_point("registry.put")
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                       suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    f.write(data)
+                # the kill-during-put window: dying between the temp
+                # write and the rename must leave the old record intact
+                # (atomicity is the rename, tested in tests/test_faults)
+                faults.fault_point("registry.put.replace")
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+
+        self._retry_io(attempt, op="put")
 
     # -- eviction -------------------------------------------------------
     def evict(self, fp) -> bool:

@@ -1,7 +1,7 @@
 from .heartbeat import HeartbeatMonitor
 from .straggler import StragglerDetector
-from .restart import RestartPolicy, run_with_restarts
+from .restart import RestartPolicy, backoff_delay_s, run_with_restarts
 from .elastic import plan_mesh_shape
 
 __all__ = ["HeartbeatMonitor", "StragglerDetector", "RestartPolicy",
-           "run_with_restarts", "plan_mesh_shape"]
+           "backoff_delay_s", "run_with_restarts", "plan_mesh_shape"]

@@ -1,5 +1,14 @@
 """Checkpoint/restart supervision: run a training loop under a restart
-policy; on failure, resume from the latest checkpoint (backoff + budget)."""
+policy; on failure, resume from the latest checkpoint (backoff + budget).
+
+The exponential backoff is tracked by an explicit **consecutive-failure
+count**, not the failure-window list: the window exists to budget
+*recent* failures (``max_failures`` within ``failure_window_s``), and
+pruning old entries out of it used to silently reset the backoff
+exponent — a crash-looping job would sleep 1s, 2s, 1s, 2s forever.
+Backoff now doubles per consecutive failure and is capped at
+``max_backoff_s``.
+"""
 
 from __future__ import annotations
 
@@ -13,6 +22,18 @@ class RestartPolicy:
     max_failures: int = 5
     backoff_s: float = 0.0
     failure_window_s: float = 3600.0
+    max_backoff_s: float = 300.0
+
+
+def backoff_delay_s(policy: RestartPolicy, consecutive_failures: int) -> float:
+    """Capped exponential backoff after the Nth consecutive failure
+    (N >= 1).  0.0 when the policy has no base backoff."""
+    if not policy.backoff_s or consecutive_failures < 1:
+        return 0.0
+    # clamp the exponent: a long crash loop must hit the cap, not
+    # overflow float conversion at 2**1024
+    exponent = min(consecutive_failures - 1, 63)
+    return min(policy.backoff_s * (2 ** exponent), policy.max_backoff_s)
 
 
 def run_with_restarts(run_fn: Callable[[Optional[str]], None],
@@ -22,6 +43,7 @@ def run_with_restarts(run_fn: Callable[[Optional[str]], None],
     """``run_fn(resume_path)`` raises on node failure; returns on success.
     Returns the number of restarts performed."""
     failures = []
+    consecutive = 0
     restarts = 0
     while True:
         try:
@@ -32,8 +54,10 @@ def run_with_restarts(run_fn: Callable[[Optional[str]], None],
             failures = [t for t in failures
                         if now - t < policy.failure_window_s]
             failures.append(now)
+            consecutive += 1
             if len(failures) > policy.max_failures:
                 raise
             restarts += 1
-            if policy.backoff_s:
-                sleep(policy.backoff_s * (2 ** (len(failures) - 1)))
+            delay = backoff_delay_s(policy, consecutive)
+            if delay:
+                sleep(delay)

@@ -45,7 +45,8 @@ import numpy as np
 
 from .engine import EngineBase
 from .stats import Request, RequestMetrics, ServeStats
-from repro.obs import get_tracer
+from repro import faults
+from repro.obs import get_metrics, get_tracer
 
 
 class _Slot:
@@ -152,19 +153,78 @@ class ContinuousServingEngine(EngineBase):
         pos_host = np.full(S, T - 1, np.int32)   # parked rows: see module doc
         cur_dev = pos_dev = step_dev = None
         membership_dirty = True
+        shed = timed_out = retried = 0
+
+        # overload policy (DESIGN.md §15): deadlines + admission control
+        # are policed once per tick; both paths account the request in
+        # ``metrics`` exactly once, so nothing is ever silently dropped
+        def _deadline(req: Request) -> Optional[float]:
+            dl = req.deadline_s if req.deadline_s is not None \
+                else cfg.deadline_s
+            return None if dl is None else req.arrival_s + dl
+        policed = cfg.deadline_s is not None \
+            or cfg.admit_watermark is not None \
+            or any(r.deadline_s is not None for r in requests)
+
+        def drop(req_idx: int, req: Request, reason: str, now_s: float):
+            """Account a request that never reached a slot (shed, or timed
+            out while queued): empty output, zero tokens."""
+            nonlocal shed, timed_out
+            outs[req_idx] = np.zeros(0, np.int32)
+            metrics.append((req_idx, RequestMetrics(
+                request_id=req.request_id, prompt_len=len(req.prompt),
+                new_tokens=0, queue_wait_s=now_s - req.arrival_s,
+                ttft_s=0.0, decode_s=0.0, finish_reason=reason)))
+            if reason == "shed":
+                shed += 1
+            else:
+                timed_out += 1
+            get_metrics().counter("serve." + reason)
+            tr.instant("serve." + reason, cat="serve",
+                       request_id=req.request_id,
+                       queued_s=now_s - req.arrival_s)
+
+        def police_queue(now_s: float):
+            """Time out arrived requests past their deadline; shed the
+            newest arrivals above the admission watermark."""
+            kept: List = []
+            waiting = 0
+            while queue:
+                idx, req = queue[0]
+                if req.arrival_s > now_s:
+                    break              # sorted by arrival: rest is future
+                queue.popleft()
+                dl = _deadline(req)
+                if dl is not None and now_s > dl:
+                    drop(idx, req, "timeout", now_s)
+                elif cfg.admit_watermark is not None \
+                        and waiting >= cfg.admit_watermark:
+                    drop(idx, req, "shed", now_s)
+                else:
+                    kept.append((idx, req))
+                    waiting += 1
+            for item in reversed(kept):
+                queue.appendleft(item)
 
         def finish(slot: _Slot, reason: str, now_s: float):
-            nonlocal membership_dirty
+            nonlocal membership_dirty, timed_out
             req = slot.req
             outs[slot.req_idx] = np.array(slot.gen, np.int32)
+            # a slot evicted mid-prefill has no first token: its TTFT and
+            # decode time are undefined, reported as 0 and excluded from
+            # ServeStats' TTFT aggregates (new_tokens == 0)
+            started = bool(slot.gen)
             m = RequestMetrics(
                 request_id=req.request_id, prompt_len=len(req.prompt),
                 new_tokens=len(slot.gen),
                 queue_wait_s=slot.admit_s - req.arrival_s,
-                ttft_s=slot.first_s - req.arrival_s,
-                decode_s=now_s - slot.first_s,
+                ttft_s=slot.first_s - req.arrival_s if started else 0.0,
+                decode_s=now_s - slot.first_s if started else 0.0,
                 finish_reason=reason)
             metrics.append((slot.req_idx, m))
+            if reason == "timeout":
+                timed_out += 1
+                get_metrics().counter("serve.timeout")
             if tr.enabled:
                 tr.instant("serve.finish", cat="serve",
                            request_id=req.request_id, slot=slot.index,
@@ -174,11 +234,23 @@ class ContinuousServingEngine(EngineBase):
                 tr.counter("serve.request", ttft_ms=m.ttft_s * 1e3,
                            decode_tps=m.decode_tps)
             slot.state, slot.req, slot.gen = "free", None, []
+            slot.chunks, slot.cache = [], None
             pos_host[slot.index] = T - 1
             membership_dirty = True
 
         while queue or any(s.state != "free" for s in slots):
             now = time.perf_counter() - t0
+            if policed:
+                police_queue(now)
+                # deadline eviction of in-flight requests: a timed-out
+                # slot frees immediately (partial output kept) so a
+                # stuck/slow request can never wedge the slot forever
+                for slot in slots:
+                    if slot.state == "free":
+                        continue
+                    dl = _deadline(slot.req)
+                    if dl is not None and now > dl:
+                        finish(slot, "timeout", now)
             # --- admission: recycle free slots from the arrived queue --- #
             for slot in slots:
                 if slot.state != "free" or not queue \
@@ -262,17 +334,38 @@ class ContinuousServingEngine(EngineBase):
                                       for s in slots], np.int32)
                 step_dev = jnp.asarray(step_host)
                 membership_dirty = False
-            with tr.span("serve.decode_tick", cat="serve",
-                         active=int(sum(1 for s in slots
-                                        if s.state == "decode"))
-                         if tr.enabled else 0):
-                cur_dev, pos_dev, cache = self.decode_tick(
-                    self.params, cache, cur_dev, pos_dev, step_dev, kv0)
-                decode_steps += 1
-                # writable host mirror (np.asarray of a jax array is
-                # read-only); this D2H copy is the tick's one device sync,
-                # so the span brackets real work, not dispatch latency
-                cur_host = np.array(cur_dev)[:, 0]
+            # transient errors (device hiccup, injected TransientIOError)
+            # retry the whole tick: its inputs are unchanged until the
+            # assignment below succeeds, so a retry is exact
+            last_exc: Optional[BaseException] = None
+            for _ in range(max(1, cfg.tick_retries)):
+                try:
+                    faults.fault_point("serve.tick")
+                    with tr.span("serve.decode_tick", cat="serve",
+                                 active=int(sum(1 for s in slots
+                                                if s.state == "decode"))
+                                 if tr.enabled else 0):
+                        nxt_cur, nxt_pos, nxt_cache = self.decode_tick(
+                            self.params, cache, cur_dev, pos_dev, step_dev,
+                            kv0)
+                        # writable host mirror (np.asarray of a jax array
+                        # is read-only); this D2H copy is the tick's one
+                        # device sync, so the span brackets real work,
+                        # not dispatch latency
+                        nxt_host = np.array(nxt_cur)[:, 0]
+                    cur_dev, pos_dev, cache = nxt_cur, nxt_pos, nxt_cache
+                    cur_host = nxt_host
+                    decode_steps += 1
+                except OSError as exc:
+                    last_exc = exc
+                    retried += 1
+                    get_metrics().counter("serve.tick_retries")
+                    tr.instant("fault.tick_retry", cat="fault",
+                               error=repr(exc))
+                    continue
+                break
+            else:
+                raise last_exc
             pos_host += step_host
             now_s = time.perf_counter() - t0
             for slot in slots:
@@ -291,5 +384,6 @@ class ContinuousServingEngine(EngineBase):
                            wall_s=time.perf_counter() - t0,
                            decode_steps=decode_steps,
                            prefill_chunks=prefill_chunks,
-                           engine=type(self).__name__)
+                           engine=type(self).__name__,
+                           shed=shed, timed_out=timed_out, retried=retried)
         return outs, stats

@@ -44,6 +44,18 @@ class ServeConfig:
     # is truncated to end with it.
     eos_token: Optional[int] = None
     prefill_chunk: int = 32     # continuous: tokens prefilled per tick
+    # -- overload/fault policy (continuous engine, DESIGN.md §15) -------
+    # Default per-request deadline from arrival (Request.deadline_s
+    # overrides); past it a queued request is timed out without a slot
+    # and an in-flight one is evicted keeping its partial output.
+    deadline_s: Optional[float] = None
+    # Admission watermark: when more than this many *arrived* requests
+    # are waiting, the newest arrivals are shed (finish_reason "shed")
+    # instead of queueing unboundedly.  None = never shed.
+    admit_watermark: Optional[int] = None
+    # Bounded retry of the fused decode tick on transient (OS-level)
+    # errors before giving up; retries land in ServeStats.retried.
+    tick_retries: int = 3
 
 
 def model_gemm_shapes(mcfg, cfg: "ServeConfig") -> List[Tuple[int, int, int]]:

@@ -96,3 +96,35 @@ def poisson_requests(n: int, rate_rps: float, vocab_size: int,
         reqs.append(Request(prompt=prompt, max_new_tokens=max_new_tokens,
                             arrival_s=t, request_id=i))
     return reqs
+
+
+def bursty_requests(n: int, base_rps: float, burst_rps: float,
+                    vocab_size: int,
+                    burst_every: int = 8, burst_len: int = 4,
+                    prompt_len: range = range(2, 12),
+                    max_new_tokens: int = 64,
+                    deadline_s: Optional[float] = None,
+                    seed: int = 0) -> List[Request]:
+    """A bursty (Markov-modulated Poisson) arrival trace.
+
+    Arrivals alternate between a ``base_rps`` phase and a ``burst_rps``
+    phase: every ``burst_every`` requests, the next ``burst_len`` arrive
+    at the burst rate.  This is the overload workload for the admission
+    control / deadline-eviction chaos gate (``benchmarks/chaos.py``):
+    bursts drive the queue past the watermark while the base phase lets
+    it drain.  ``deadline_s`` stamps each request's per-request SLO.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        in_burst = (i % (burst_every + burst_len)) >= burst_every
+        rate = burst_rps if in_burst else base_rps
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.integers(prompt_len.start, prompt_len.stop))
+        prompt = rng.integers(1, vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                            arrival_s=t, request_id=i,
+                            deadline_s=deadline_s))
+    return reqs

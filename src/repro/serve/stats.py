@@ -23,11 +23,17 @@ class Request:
 
     ``request_id`` is a caller-side label surfaced in
     :class:`RequestMetrics` (-1 = auto-assign the input position); engine
-    outputs are always returned in input order regardless of it."""
+    outputs are always returned in input order regardless of it.
+
+    ``deadline_s`` is the per-request latency SLO, measured from
+    ``arrival_s``: past it the request is evicted (``finish_reason
+    "timeout"``, keeping whatever was generated) or never admitted.
+    None falls back to ``ServeConfig.deadline_s`` (None = no deadline)."""
     prompt: np.ndarray
     max_new_tokens: int = 32
     arrival_s: float = 0.0
     request_id: int = -1
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -38,7 +44,7 @@ class RequestMetrics:
     queue_wait_s: float        # arrival -> admitted into a slot/wave
     ttft_s: float              # arrival -> first generated token
     decode_s: float            # first generated token -> last
-    finish_reason: str         # "eos" | "length"
+    finish_reason: str         # "eos" | "length" | "timeout" | "shed"
 
     @property
     def decode_tps(self) -> float:
@@ -71,6 +77,13 @@ class ServeStats:
     prefill_chunks: int = 0    # jit'd prefill/chunk invocations
     engine: str = ""           # engine-class provenance (which scheduler
     #                            implementation produced these numbers)
+    # fault/overload accounting (DESIGN.md §15): every submitted request
+    # is in ``requests`` exactly once — shed and timed-out ones included,
+    # with finish_reason "shed"/"timeout" — so these are cross-checkable
+    # against the finish_reasons histogram
+    shed: int = 0              # never admitted (load shedding)
+    timed_out: int = 0         # evicted past their deadline
+    retried: int = 0           # decode ticks retried on transient errors
 
     @property
     def total_new_tokens(self) -> int:
@@ -84,7 +97,11 @@ class ServeStats:
         return float(np.quantile(np.asarray(vals), q)) if vals else 0.0
 
     def ttft_s(self, q: float = 0.5) -> float:
-        return self._quantile([r.ttft_s for r in self.requests], q)
+        # shed/queue-timeout requests never produced a first token: their
+        # placeholder ttft of 0.0 would *flatter* the percentile, so TTFT
+        # aggregates only requests that actually started generating
+        return self._quantile([r.ttft_s for r in self.requests
+                               if r.new_tokens >= 1], q)
 
     def queue_wait_s(self, q: float = 0.5) -> float:
         return self._quantile([r.queue_wait_s for r in self.requests], q)
@@ -96,7 +113,8 @@ class ServeStats:
         ttft = Histogram("ttft_s", window=window)
         tps = Histogram("decode_tps", window=window)
         for r in self.requests:
-            ttft.observe(r.ttft_s)
+            if r.new_tokens >= 1:      # see ttft_s: never-started requests
+                ttft.observe(r.ttft_s)  # have no first token to clock
             tps.observe(r.decode_tps)
         return {"window": window, "ttft_s": ttft.summary(),
                 "decode_tps": tps.summary()}
@@ -115,6 +133,9 @@ class ServeStats:
             "ttft_s_p95": self.ttft_s(0.95),
             "queue_wait_s_p50": self.queue_wait_s(0.5),
             "queue_wait_s_p95": self.queue_wait_s(0.95),
+            "shed": self.shed,
+            "timed_out": self.timed_out,
+            "retried": self.retried,
             "rolling": self.rolling(),
             "finish_reasons": {
                 reason: sum(1 for r in self.requests
@@ -136,7 +157,11 @@ class ServeStats:
                 f"{self.ttft_s(0.95) * 1e3:.0f} ms | "
                 f"queue p95 {self.queue_wait_s(0.95) * 1e3:.0f} ms | "
                 f"{self.decode_steps} decode steps, "
-                f"{self.prefill_chunks} prefill chunks")
+                f"{self.prefill_chunks} prefill chunks"
+                + (f" | shed {self.shed}, timeout {self.timed_out}, "
+                   f"retried {self.retried}"
+                   if (self.shed or self.timed_out or self.retried)
+                   else ""))
 
 
 def as_requests(prompts: List[np.ndarray], max_new_tokens: int

@@ -18,9 +18,9 @@ import pytest
 from repro.analysis import (Project, baseline_payload, default_rules,
                             load_baseline, run_rules)
 from repro.analysis.rules import (ALL_RULES, RULES_BY_NAME, AtomicWriteRule,
-                                  ForkSafetyRule, Int64OverflowRule,
-                                  JitHygieneRule, RngDisciplineRule,
-                                  ScopedConfigRule)
+                                  BareExceptRule, ForkSafetyRule,
+                                  Int64OverflowRule, JitHygieneRule,
+                                  RngDisciplineRule, ScopedConfigRule)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PKG_DIR = os.path.join(REPO, "src", "repro")
@@ -495,6 +495,109 @@ def test_mypy_baseline_clean():
 
 def test_every_rule_has_name_description_and_fixture():
     names = [cls.name for cls in ALL_RULES]
-    assert len(names) == len(set(names)) >= 6
+    assert len(names) == len(set(names)) >= 7
     for cls in ALL_RULES:
         assert cls.name and cls.description
+
+
+# ------------------------------------------------------------------ #
+# bare-except
+# ------------------------------------------------------------------ #
+def _bare_except_findings(tmp_path, body):
+    project = make_project(tmp_path, {"svc.py": body})
+    return findings_of(BareExceptRule(), project)
+
+
+def test_bare_except_catches_silent_swallow(tmp_path):
+    findings = _bare_except_findings(tmp_path, """\
+        def drain():
+            try:
+                work()
+            except Exception:
+                pass
+    """)
+    assert len(findings) == 1
+    assert findings[0].rule == "bare-except"
+    assert findings[0].line == 4
+
+
+def test_bare_except_catches_bare_and_tuple_forms(tmp_path):
+    findings = _bare_except_findings(tmp_path, """\
+        def a():
+            try:
+                work()
+            except:
+                stats = stats + 1
+        def b():
+            try:
+                work()
+            except (ValueError, Exception):
+                counters["x"] = 1
+    """)
+    assert len(findings) == 2
+
+
+def test_bare_except_counter_bump_alone_is_still_silent(tmp_path):
+    # the original TuningService._drain bug: a mute stats counter is not
+    # reporting — nothing human-visible records *what* failed
+    findings = _bare_except_findings(tmp_path, """\
+        def drain():
+            try:
+                work()
+            except Exception:
+                stats["tune_errors"] += 1
+    """)
+    assert len(findings) == 1
+
+
+def test_bare_except_legal_forms_pass(tmp_path):
+    findings = _bare_except_findings(tmp_path, """\
+        import logging
+        _log = logging.getLogger(__name__)
+
+        def reraises():
+            try:
+                work()
+            except Exception:
+                cleanup()
+                raise
+
+        def logs():
+            try:
+                work()
+            except Exception:
+                _log.warning("work failed")
+
+        def uses_bound():
+            try:
+                work()
+            except Exception as exc:
+                record(repr(exc))
+
+        def narrow_is_policy():
+            try:
+                work()
+            except OSError:
+                pass
+    """)
+    assert findings == []
+
+
+def test_bare_except_suppression_needs_justification(tmp_path):
+    project = make_project(tmp_path, {"svc.py": """\
+        def drain():
+            try:
+                work()
+            except Exception:  # repro: ignore[bare-except] -- probe only; failure means the backend is absent, the caller falls back
+                pass
+    """})
+    report = run_rules(project, [BareExceptRule()])
+    assert [f for f in report.findings if f.blocking] == []
+    assert any(f.suppressed for f in report.findings)
+
+
+def test_bare_except_real_tree_is_clean():
+    project = Project.load(PKG_DIR, package_name="repro")
+    report = run_rules(project, [BareExceptRule()],
+                       all_rule_names=list(RULES_BY_NAME))
+    assert [f.render() for f in report.findings if f.blocking] == []

@@ -14,8 +14,8 @@ from repro.ckpt import (AsyncCheckpointer, latest_checkpoint,
                         restore_checkpoint, restore_params, save_checkpoint)
 from repro.data import DataConfig, SyntheticLM, host_shard_iterator
 from repro.runtime import (HeartbeatMonitor, RestartPolicy,
-                           StragglerDetector, plan_mesh_shape,
-                           run_with_restarts)
+                           StragglerDetector, backoff_delay_s,
+                           plan_mesh_shape, run_with_restarts)
 
 
 def _state():
@@ -188,3 +188,130 @@ def test_restore_params_missing_param_is_clear_error(tmp_path):
                 "brand_new": jnp.zeros((2,))}
     with pytest.raises(ValueError, match="missing param.*brand_new"):
         restore_params(latest_checkpoint(d), template)
+
+
+# ------------------------------------------------------------------ #
+# Restart backoff: consecutive-failure exponent, cap, window pruning
+# (DESIGN.md §15 — the exponent must not reset when the window prunes)
+# ------------------------------------------------------------------ #
+def test_backoff_delay_doubles_and_caps():
+    p = RestartPolicy(backoff_s=1.0, max_backoff_s=5.0)
+    assert [backoff_delay_s(p, n) for n in range(1, 6)] == \
+        [1.0, 2.0, 4.0, 5.0, 5.0]
+    assert backoff_delay_s(p, 0) == 0.0
+    assert backoff_delay_s(RestartPolicy(backoff_s=0.0), 3) == 0.0
+
+
+def test_backoff_exponent_survives_window_pruning():
+    """A crash-looping job whose failures age out of the budget window
+    must keep escalating its backoff — the window budgets *how many*
+    recent failures are tolerated, not how long to sleep."""
+    clock = [0.0]
+    slept = []
+    fails = [0]
+
+    def run(resume):
+        fails[0] += 1
+        if fails[0] <= 8:
+            raise RuntimeError("crash loop")
+
+    def fake_sleep(s):
+        slept.append(s)
+        clock[0] += s
+
+    def fake_clock():
+        clock[0] += 100.0   # failures spaced past the 150s window
+        return clock[0]
+
+    policy = RestartPolicy(max_failures=3, backoff_s=1.0,
+                           failure_window_s=150.0, max_backoff_s=64.0)
+    n = run_with_restarts(run, lambda: None, policy,
+                          clock=fake_clock, sleep=fake_sleep)
+    # window pruning keeps the run alive past max_failures (only the
+    # last 1-2 failures are ever inside the 150s window), and the
+    # consecutive count keeps doubling until the cap
+    assert n == 8
+    assert slept == [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 64.0]
+
+
+def test_backoff_cap_honored_under_fake_clock():
+    clock = [0.0]
+    slept = []
+
+    calls = []
+
+    def run(resume):
+        calls.append(1)
+        if len(calls) <= 5:
+            raise RuntimeError("transient")
+
+    policy = RestartPolicy(max_failures=10, backoff_s=2.0,
+                           max_backoff_s=6.0)
+    n = run_with_restarts(run, lambda: None, policy,
+                          clock=lambda: clock[0],
+                          sleep=lambda s: slept.append(s))
+    assert n == 5
+    assert slept == [2.0, 4.0, 6.0, 6.0, 6.0]
+
+
+# ------------------------------------------------------------------ #
+# Heartbeats: dead -> revived -> removed transitions under a fake clock
+# ------------------------------------------------------------------ #
+def test_heartbeat_revival_and_add():
+    clock = [0.0]
+    hb = HeartbeatMonitor([0, 1], timeout_s=10, clock=lambda: clock[0])
+    clock[0] = 11.0
+    assert set(hb.dead_hosts()) == {0, 1}
+    hb.beat(0)                       # host 0 comes back
+    assert hb.dead_hosts() == [1]
+    hb.add(2)                        # elastic join starts alive
+    assert set(hb.alive_hosts()) == {0, 2}
+    clock[0] = 22.0
+    assert set(hb.dead_hosts()) == {0, 1, 2}   # everyone stale again
+    hb.beat(0)
+    assert set(hb.dead_hosts()) == {1, 2}
+    hb.remove(1)
+    hb.remove(2)
+    assert hb.dead_hosts() == [] and hb.alive_hosts() == [0]
+
+
+def test_heartbeat_boundary_is_exclusive():
+    clock = [0.0]
+    hb = HeartbeatMonitor([0], timeout_s=10, clock=lambda: clock[0])
+    clock[0] = 10.0                  # exactly timeout_s: still alive
+    assert hb.dead_hosts() == []
+    clock[0] = 10.001
+    assert hb.dead_hosts() == [0]
+
+
+# ------------------------------------------------------------------ #
+# Stragglers: MAD thresholding edge cases (feeds the engine's
+# per-design straggler flagging, DESIGN.md §15)
+# ------------------------------------------------------------------ #
+def test_straggler_needs_a_fleet():
+    det = StragglerDetector(window=4, k=4.0, min_samples=1)
+    det.record(0, 1.0)
+    det.record(1, 9.0)
+    assert det.stragglers() == []    # < 3 hosts: no fleet to compare
+
+
+def test_straggler_min_samples_gating():
+    det = StragglerDetector(window=10, k=4.0, min_samples=3)
+    for h in range(4):
+        det.record(h, 1.0)
+        det.record(h, 1.0)
+    det.record(4, 50.0)
+    det.record(4, 50.0)
+    assert det.stragglers() == []    # nobody has min_samples yet
+    for h in range(4):
+        det.record(h, 1.0)
+    det.record(4, 50.0)
+    assert det.stragglers() == [4]
+
+
+def test_straggler_uniform_fleet_has_none():
+    det = StragglerDetector(window=8, k=4.0, min_samples=3)
+    for _ in range(5):
+        for h in range(6):
+            det.record(h, 2.0)
+    assert det.stragglers() == []

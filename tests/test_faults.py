@@ -1,0 +1,356 @@
+"""Chaos harness (DESIGN.md §15): deterministic fault injection and the
+recovery it exercises — per-design isolation, pool rebuild + retry with
+bit-identical results, kill-during-put crash consistency, corrupt-write
+quarantine, transient-I/O retry, N-process write contention, and poisoned
+background tunes staying visible.
+
+No jax needed: the whole chaos surface (faults, engine, registry) is
+jax-free by construction (fork-safety, DESIGN.md §15)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import faults
+from repro.core import (EvoConfig, SearchSession, SessionConfig, matmul,
+                        pareto_frontier)
+from repro.faults import (CRASH_EXIT_CODE, FaultPlan, FaultSpec,
+                          InjectedFault, TransientIOError, chaos_plan,
+                          injected)
+from repro.obs import get_metrics
+from repro.registry import Record, RegistryStore
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = EvoConfig(epochs=2, population=16, parents=4, seed=0)
+
+
+def _start_method():
+    """fork is fast, but unsafe once another test file has pulled in jax
+    (its runtime threads don't survive fork) — decide at run time."""
+    return "fork" if "jax" not in sys.modules else "spawn"
+
+
+def session(wl, plan_free=True, **session_kw):
+    session_kw.setdefault("executor", "serial")
+    session_kw.setdefault("early_abort", False)
+    return SearchSession(wl, cfg=CFG, use_mp_seed=False,
+                         session=SessionConfig(**session_kw))
+
+
+def best_key(report):
+    b = report.best
+    return (b.design.label(), dict(b.evo.best.triples), b.latency_cycles)
+
+
+def make_record(digest="ab" * 32, workload="wl", latency=100.0) -> Record:
+    return Record(fingerprint=digest, family="fam",
+                  features=[6.0, 6.0, 6.0], workload=workload,
+                  kind="systolic", hardware="u250",
+                  best={"latency_cycles": latency, "feasible": True},
+                  pareto=[], evals=10, seconds=0.5)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.deactivate()
+    get_metrics().reset()
+    yield
+    faults.deactivate()
+
+
+# ------------------------------------------------------------------ #
+# Plans: determinism, validation, once-only firing
+# ------------------------------------------------------------------ #
+def test_chaos_plan_is_deterministic_and_targeted():
+    a = chaos_plan(seed=7, n_designs=18)
+    b = chaos_plan(seed=7, n_designs=18)
+    assert a == b
+    assert chaos_plan(seed=8, n_designs=18) != a
+    # every worker-targeting spec hits a distinct design index
+    keys = [s.key for s in a.specs if s.site == "search.worker"]
+    assert len(keys) == len(set(keys))
+    assert all(0 <= int(k) < 18 for k in keys)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("search.worker", "explode")
+    with pytest.raises(ValueError):
+        FaultSpec("search.worker", "raise", times=0)
+    # sites are open (ad-hoc sites are legal in tests), kinds are not
+    FaultSpec("my.adhoc.site", "raise")
+
+
+def test_fault_fires_exactly_times_then_never_again():
+    plan = FaultPlan((FaultSpec("registry.get", "raise", times=2),))
+    with injected(plan):
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                faults.fault_point("registry.get")
+        faults.fault_point("registry.get")          # exhausted: no-op
+    faults.fault_point("registry.get")              # deactivated: no-op
+
+
+def test_fault_tokens_shared_across_activations():
+    """Claims live on disk, so a re-activation with the same state dir
+    (what a pool worker re-spawn does) sees already-spent faults."""
+    plan = FaultPlan((FaultSpec("registry.get", "raise", times=1),))
+    state = faults.activate(plan)
+    with pytest.raises(InjectedFault):
+        faults.fault_point("registry.get")
+    faults.deactivate()
+    faults.activate(plan, state_dir=state)          # "another process"
+    faults.fault_point("registry.get")              # already claimed
+    faults.deactivate()
+
+
+def test_key_scoping_and_kinds():
+    plan = FaultPlan((
+        FaultSpec("search.worker", "raise", key="3"),
+        FaultSpec("registry.get", "io_error"),
+        FaultSpec("search.worker", "crash", key="5"),
+    ))
+    with injected(plan):
+        faults.fault_point("search.worker", key=0)  # wrong key: no-op
+        with pytest.raises(InjectedFault):
+            faults.fault_point("search.worker", key=3)
+        with pytest.raises(TransientIOError):
+            faults.fault_point("registry.get")
+        # crash outside a worker raises instead of exiting the test run
+        with pytest.raises(InjectedFault):
+            faults.fault_point("search.worker", key=5)
+
+
+def test_corrupt_bytes_only_at_matching_site():
+    plan = FaultPlan((FaultSpec("registry.put.payload", "corrupt"),))
+    with injected(plan):
+        assert faults.corrupt_bytes("serve.tick", "x" * 64) == "x" * 64
+        mangled = faults.corrupt_bytes("registry.put.payload", "x" * 64)
+        assert mangled != "x" * 64 and "injected-corruption" in mangled
+        # once-only: the second put is clean
+        assert faults.corrupt_bytes("registry.put.payload",
+                                    "y" * 64) == "y" * 64
+
+
+# ------------------------------------------------------------------ #
+# Search: isolation, recovery, bit-identity, graceful degrade
+# ------------------------------------------------------------------ #
+def test_serial_worker_fault_is_isolated():
+    wl = matmul(32, 32, 32)
+    plan = FaultPlan((FaultSpec("search.worker", "raise", key="2"),))
+    with injected(plan):
+        report = session(wl).run()
+    failed = [r for r in report.results if r.failed]
+    assert len(failed) == 1
+    assert "InjectedFault" in failed[0].error
+    assert not failed[0].feasible
+    assert report.best is not None and not report.best.failed
+    assert get_metrics().counters.get("search.worker_errors") == 1
+
+
+def test_pool_recovers_from_crash_and_hang_bit_identically():
+    """The §15 headline: a worker crash (os._exit mid-design) and a hung
+    worker both recover — the pool is rebuilt, lost designs retried —
+    and the final best is bit-identical to the fault-free sweep."""
+    wl = matmul(32, 32, 32)
+    clean = session(wl, executor="process", max_workers=2,
+                    start_method=_start_method(), hang_timeout_s=3.0).run()
+    plan = FaultPlan((
+        FaultSpec("search.worker", "crash", key="3"),
+        FaultSpec("search.worker", "hang", key="1", delay_s=60.0),
+    ))
+    s = session(wl, executor="process", max_workers=2,
+                start_method=_start_method(), hang_timeout_s=3.0)
+    with injected(plan):
+        chaotic = s.run()
+    assert not any(r.failed for r in chaotic.results)
+    assert s.pool_rebuilds >= 1
+    assert s.design_retries        # the lost designs were re-dispatched
+    assert best_key(chaotic) == best_key(clean)
+    assert [r.latency_cycles for r in chaotic.results] == \
+        [r.latency_cycles for r in clean.results]
+
+
+def test_pool_degrades_to_serial_when_rebuilds_exhausted():
+    """A fault that outlives the rebuild budget must not loop forever:
+    the engine falls back to in-process execution and finishes."""
+    wl = matmul(16, 16, 16)
+    # keyless crash: fires on every design, every attempt, 100 times
+    plan = FaultPlan((FaultSpec("search.worker", "crash", times=100),))
+    s = session(wl, executor="process", max_workers=2,
+                start_method=_start_method(), max_pool_rebuilds=1,
+                max_design_retries=1)
+    with injected(plan):
+        report = s.run()
+    assert s.pool_rebuilds == 2           # budget 1, then degrade
+    assert len(report.results) == len(s.designs)
+    # in-process the crash kind raises instead of exiting, so the
+    # degraded pass isolates what is left of the plan as failures
+    assert get_metrics().counters.get("search.degrade_serial") == 1
+
+
+def test_failed_designs_never_reach_frontier_or_registry(tmp_path):
+    wl = matmul(16, 16, 16)
+    store = RegistryStore(str(tmp_path / "registry"))
+    plan = FaultPlan((FaultSpec("search.worker", "raise", key="0",
+                                times=10),))
+    s = SearchSession(wl, cfg=CFG, use_mp_seed=False, registry=store,
+                      session=SessionConfig(executor="serial",
+                                            early_abort=False))
+    with injected(plan):
+        report = s.run()
+    assert any(r.failed for r in report.results)
+    assert not any(r.failed for r in pareto_frontier(report.results))
+    assert not any(r.failed for r in s.top_k(3))
+    # a sweep with holes is not a ground truth worth recording
+    assert len(store) == 0
+
+
+# ------------------------------------------------------------------ #
+# Registry: crash consistency, quarantine, retry, contention
+# ------------------------------------------------------------------ #
+_CHILD_PUT = """
+import sys
+sys.path.insert(0, "src")
+from repro import faults
+from repro.faults import FaultPlan, FaultSpec
+from repro.registry import Record, RegistryStore
+
+root, state, site = sys.argv[1], sys.argv[2], sys.argv[3]
+faults.activate(FaultPlan((FaultSpec(site, "crash"),)),
+                state_dir=state, worker=True)
+store = RegistryStore(root)
+rec = Record(fingerprint="ab" * 32, family="fam",
+             features=[6.0, 6.0, 6.0], workload="wl", kind="systolic",
+             hardware="u250",
+             best={"latency_cycles": 1.0, "feasible": True}, pareto=[])
+store.put(rec)
+print("survived")          # only reached if the fault failed to fire
+"""
+
+
+@pytest.mark.parametrize("site", ["registry.put", "registry.put.replace"])
+def test_kill_during_put_leaves_old_record_intact(tmp_path, site):
+    """A writer killed anywhere inside put() — before the temp file or in
+    the window between temp write and rename — must leave the previous
+    record readable.  Atomicity is the os.replace."""
+    root = str(tmp_path / "registry")
+    store = RegistryStore(root)
+    store.put(make_record(latency=100.0))
+    state = str(tmp_path / "fault-state")
+    os.makedirs(state, exist_ok=True)
+    out = subprocess.run(
+        [sys.executable, "-c", _CHILD_PUT, root, state, site],
+        capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == CRASH_EXIT_CODE, out.stderr
+    assert "survived" not in out.stdout
+    got = store.get("ab" * 32)
+    assert got is not None and got.best["latency_cycles"] == 100.0
+
+
+def test_corrupt_put_is_quarantined_not_served(tmp_path):
+    store = RegistryStore(str(tmp_path / "registry"))
+    plan = FaultPlan((FaultSpec("registry.put.payload", "corrupt"),))
+    with injected(plan):
+        store.put(make_record(latency=42.0))
+        assert store.get("ab" * 32) is None     # quarantined, not crash
+    path = store._path("ab" * 32)
+    assert os.path.exists(path + ".corrupt")
+    assert not os.path.exists(path)
+    # the store stays writable after quarantine
+    store.put(make_record(latency=43.0))
+    got = store.get("ab" * 32)
+    assert got is not None and got.best["latency_cycles"] == 43.0
+
+
+def test_transient_io_errors_are_retried(tmp_path):
+    store = RegistryStore(str(tmp_path / "registry"), io_backoff_s=0.0)
+    store.put(make_record(latency=5.0))
+    plan = FaultPlan((FaultSpec("registry.get", "io_error", times=2),))
+    with injected(plan):
+        got = store.get("ab" * 32)
+    assert got is not None and got.best["latency_cycles"] == 5.0
+    assert get_metrics().counters.get("registry.io_retry") == 2
+
+
+def test_io_retry_budget_exhausted_raises(tmp_path):
+    store = RegistryStore(str(tmp_path / "registry"), io_retries=2,
+                          io_backoff_s=0.0)
+    store.put(make_record())
+    plan = FaultPlan((FaultSpec("registry.get", "io_error", times=10),))
+    with injected(plan):
+        with pytest.raises(TransientIOError):
+            store.get("ab" * 32)
+
+
+def test_missing_record_is_a_miss_not_a_retry(tmp_path):
+    store = RegistryStore(str(tmp_path / "registry"))
+    assert store.get("cd" * 32) is None
+    assert "registry.io_retry" not in get_metrics().counters
+
+
+_CHILD_CONTEND = """
+import sys
+sys.path.insert(0, "src")
+from repro.registry import Record, RegistryStore
+
+root, worker = sys.argv[1], int(sys.argv[2])
+store = RegistryStore(root)
+for k in range(6):
+    lat = 100.0 - worker - k / 10.0
+    rec = Record(fingerprint="ab" * 32, family="fam",
+                 features=[6.0, 6.0, 6.0], workload="wl", kind="systolic",
+                 hardware="u250",
+                 best={"latency_cycles": lat, "feasible": True}, pareto=[])
+    store.put(rec)
+    store.touch("ab" * 32)
+print("done", worker)
+"""
+
+
+def test_concurrent_put_contention_never_corrupts(tmp_path):
+    """N processes hammering put()+touch() on one fingerprint: every
+    writer exits cleanly and the survivor is a parseable, valid record
+    with one of the written latencies — no .corrupt quarantines."""
+    root = str(tmp_path / "registry")
+    procs = [subprocess.Popen([sys.executable, "-c", _CHILD_CONTEND,
+                               root, str(i)],
+                              stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True, cwd=REPO)
+             for i in range(4)]
+    for p in procs:
+        out, err = p.communicate(timeout=60)
+        assert p.returncode == 0, err
+        assert out.startswith("done")
+    store = RegistryStore(root)
+    got = store.get("ab" * 32)
+    assert got is not None
+    written = {round(100.0 - w - k / 10.0, 6)
+               for w in range(4) for k in range(6)}
+    assert round(got.best["latency_cycles"], 6) in written
+    shard = os.path.dirname(store._path("ab" * 32))
+    assert not [f for f in os.listdir(shard) if f.endswith(".corrupt")]
+
+
+# ------------------------------------------------------------------ #
+# Service: poisoned background tunes stay visible (§15 satellite)
+# ------------------------------------------------------------------ #
+def test_background_tune_failure_is_logged_and_counted(tmp_path, caplog):
+    from repro.registry import TuningService
+    svc = TuningService(store=RegistryStore(str(tmp_path / "registry")))
+    wl = matmul(16, 16, 16)
+    plan = FaultPlan((FaultSpec("service.tune", "raise"),))
+    with injected(plan):
+        with caplog.at_level("WARNING", logger="repro.registry.service"):
+            assert svc.schedule(wl, cfg=CFG)
+            assert svc.flush(timeout=30.0)
+    assert svc.stats["tune_errors"] == 1
+    assert get_metrics().counters.get("registry.tune_failed") == 1
+    assert any("background tune" in r.message and "fallback" in r.message
+               for r in caplog.records)
+    # the workload is no longer pending: a retry can be scheduled
+    assert svc.schedule(wl, cfg=CFG)
+    assert svc.flush(timeout=30.0)

@@ -14,7 +14,9 @@ from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.serve import (ContinuousServingEngine, Request, ServeConfig,
                          ServingEngine, make_engine)
-from repro.serve.sim import countdown_model, poisson_requests
+from repro.faults import FaultPlan, FaultSpec, injected
+from repro.serve.sim import (bursty_requests, countdown_model,
+                             poisson_requests)
 
 
 def _engine(arch="smollm-135m", scheduler="wave", **cfg_kw):
@@ -215,3 +217,81 @@ def test_nonpositive_budget_rejected(scheduler):
     with pytest.raises(ValueError, match="max_new_tokens"):
         eng.serve([Request(prompt=np.array([3], np.int32),
                            max_new_tokens=0)])
+
+
+# ------------------------------------------------------------------ #
+# Overload policy (DESIGN.md §15): deadlines, shedding, tick retry.
+# Invariant under every policy: each request is accounted exactly once.
+# ------------------------------------------------------------------ #
+def _countdown_engine(**cfg_kw):
+    model = countdown_model(vocab_size=16)
+    params = model.init(None)
+    cfg_kw.setdefault("max_seq", 48)
+    cfg_kw.setdefault("eos_token", 0)
+    return ContinuousServingEngine(model, params, ServeConfig(**cfg_kw))
+
+
+def test_continuous_deadline_timeout_accounts_everything():
+    """Requests whose deadline expired while queued finish as "timeout"
+    with empty output; the rest complete normally — nobody vanishes."""
+    eng = _countdown_engine(max_batch=1)
+    reqs = poisson_requests(8, rate_rps=0, vocab_size=16,
+                            max_new_tokens=32, seed=5)
+    # odd requests get a deadline that is already expired by the first
+    # policing pass (sub-microsecond SLO)
+    for i, r in enumerate(reqs):
+        if i % 2:
+            r.deadline_s = 1e-6
+    outs, stats = eng.serve(reqs)
+    assert len(stats.requests) == len(reqs)
+    assert all(o is not None for o in outs)
+    reasons = {m.request_id: m.finish_reason for m in stats.requests}
+    for i, r in enumerate(reqs):
+        if i % 2:
+            assert reasons[r.request_id] == "timeout"
+            assert len(outs[i]) == 0
+        else:
+            assert reasons[r.request_id] == "eos"
+            assert len(outs[i]) > 0
+    assert stats.timed_out == 4 and stats.shed == 0
+    assert stats.to_dict()["timed_out"] == 4
+    # zero-token drops are excluded from TTFT aggregates
+    assert all(m.new_tokens >= 1
+               for m in stats.requests if m.finish_reason == "eos")
+
+
+def test_continuous_sheds_above_watermark_under_burst():
+    """A bursty trace against a 1-slot engine with a shallow admission
+    watermark: excess arrivals are shed, everything is accounted."""
+    eng = _countdown_engine(max_batch=1, admit_watermark=2)
+    reqs = bursty_requests(16, base_rps=2000.0, burst_rps=20000.0,
+                           vocab_size=16, max_new_tokens=32, seed=2)
+    outs, stats = eng.serve(reqs)
+    assert len(stats.requests) == len(reqs)
+    assert all(o is not None for o in outs)
+    assert stats.shed >= 1
+    counts = {}
+    for m in stats.requests:
+        counts[m.finish_reason] = counts.get(m.finish_reason, 0) + 1
+    assert counts.get("shed", 0) == stats.shed
+    assert sum(counts.values()) == len(reqs)
+    assert all(m.new_tokens == 0 for m in stats.requests
+               if m.finish_reason == "shed")
+    assert "shed" in stats.summary()
+
+
+def test_continuous_tick_retry_is_transparent():
+    """Transient I/O faults inside the decode tick are retried with the
+    pre-tick state: outputs are bit-identical to the fault-free run."""
+    reqs = poisson_requests(6, rate_rps=0, vocab_size=16,
+                            max_new_tokens=32, seed=7)
+    clean_outs, clean_stats = _countdown_engine(max_batch=2).serve(reqs)
+    assert clean_stats.retried == 0
+    plan = FaultPlan((FaultSpec("serve.tick", "io_error", times=2),))
+    with injected(plan):
+        outs, stats = _countdown_engine(max_batch=2).serve(reqs)
+    assert stats.retried == 2
+    for a, b in zip(clean_outs, outs):
+        np.testing.assert_array_equal(a, b)
+    assert [m.finish_reason for m in stats.requests] == \
+        [m.finish_reason for m in clean_stats.requests]
